@@ -1,0 +1,18 @@
+"""Fig. 8: throughput vs #clusters (SYNT-CLUST; selectivity rises with k)."""
+import numpy as np
+
+from benchmarks.common import emit_row, qps
+from repro.core import MDRQEngine
+from repro.data import synthetic
+
+
+def run(quick: bool = True) -> None:
+    n = 100_000 if quick else 1_000_000
+    for k in (1, 5, 10, 20):
+        ds = synthetic.synt_clust(n, 5, k, seed=k)
+        eng = MDRQEngine(ds, structures=("scan", "kdtree", "vafile"))
+        queries = synthetic.workload(ds, 15, seed=k + 10)
+        sel = float(np.mean([ds.selectivity(q) for q in queries[:5]]))
+        for meth in ("scan", "kdtree", "vafile"):
+            r = qps(eng, queries, meth)
+            emit_row(f"fig8/k{k}/{meth}", 1e6 / r, f"qps={r:.1f};sel={sel:.4f}")

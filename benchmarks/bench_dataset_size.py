@@ -1,0 +1,19 @@
+"""Fig. 7: throughput vs dataset size (10k..1M, 5 dims, sel ~0.4%)."""
+import numpy as np
+
+from benchmarks.common import emit_row, qps
+from repro.core import MDRQEngine
+from repro.data import synthetic
+
+
+def run(quick: bool = True) -> None:
+    sizes = (10_000, 100_000, 1_000_000) if not quick else (10_000, 100_000, 400_000)
+    rng = np.random.default_rng(3)
+    for n in sizes:
+        ds = synthetic.synt_uni(n, 5, seed=1)
+        eng = MDRQEngine(ds, structures=("scan", "kdtree", "vafile"))
+        queries = [synthetic.selectivity_targeted_query(ds, 0.004, rng)
+                   for _ in range(15)]
+        for meth in ("scan", "kdtree", "vafile"):
+            r = qps(eng, queries, meth)
+            emit_row(f"fig7/n{n}/{meth}", 1e6 / r, f"qps={r:.1f}")

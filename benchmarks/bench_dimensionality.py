@@ -1,0 +1,18 @@
+"""Fig. 5: throughput vs dimensionality (5..100 dims, SYNT-UNI)."""
+import numpy as np
+
+from benchmarks.common import emit_row, qps
+from repro.core import MDRQEngine
+from repro.data import synthetic
+
+
+def run(quick: bool = True) -> None:
+    n = 100_000 if quick else 1_000_000
+    for m in (5, 10, 20, 50, 100):
+        ds = synthetic.synt_uni(n, m, seed=m)
+        eng = MDRQEngine(ds, structures=("scan", "kdtree", "vafile"))
+        queries = synthetic.workload(ds, 20, seed=m + 1)
+        sel = float(np.mean([ds.selectivity(q) for q in queries[:5]]))
+        for meth in ("scan", "kdtree", "vafile"):
+            r = qps(eng, queries, meth)
+            emit_row(f"fig5/m{m}/{meth}", 1e6 / r, f"qps={r:.1f};sel={sel:.5f}")

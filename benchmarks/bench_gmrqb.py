@@ -1,0 +1,25 @@
+"""Fig. 10 + Table 1: the GMRQ Benchmark — 8 templates + mixed workload."""
+import numpy as np
+
+from benchmarks.common import emit_row, qps
+from repro.core import MDRQEngine
+from repro.data import gmrqb
+
+
+def run(quick: bool = True) -> None:
+    n = 300_000 if quick else 10_000_000
+    ds = gmrqb.build(n, seed=0)
+    eng = MDRQEngine(ds, structures=("scan", "kdtree", "vafile"))
+    rng = np.random.default_rng(1)
+    inst = 8 if quick else 100
+    for k in range(1, 9):
+        queries = [gmrqb.template(k, rng, ds) for _ in range(inst)]
+        sel = float(np.mean([ds.selectivity(q) for q in queries[:4]]))
+        for meth in ("scan", "scan_vertical", "kdtree", "vafile"):
+            r = qps(eng, queries, meth, n_warm=1)
+            emit_row(f"fig10/T{k}/{meth}", 1e6 / r,
+                     f"qps={r:.1f};sel={sel:.6f};paper_sel={gmrqb.PAPER_TABLE1[k-1].avg_selectivity:.6f}")
+    mixed = [q for _, q in gmrqb.mixed_workload(ds, 2 * inst, seed=2)]
+    for meth in ("scan", "scan_vertical", "kdtree", "vafile", "auto"):
+        r = qps(eng, mixed, meth, n_warm=1)
+        emit_row(f"fig10/mixed/{meth}", 1e6 / r, f"qps={r:.1f}")

@@ -1,0 +1,71 @@
+"""Fig. 4: impact of hardware features (scalar / vectorized / parallel).
+
+Paper contestants -> container analogues:
+  scalar single-thread  -> numpy row loop amortized via numpy vector ops on
+                           one core (the paper's Listing 1 baseline)
+  + SIMD                -> XLA-vectorized columnar scan (kernel proxy)
+  + multi-threading     -> shard_map over 8 host devices (subprocess)
+"""
+import subprocess
+import sys
+import os
+
+import numpy as np
+
+from benchmarks.common import emit_row, qps
+from repro.core import Dataset, MDRQEngine
+from repro.data import synthetic
+
+
+def run(quick: bool = True) -> None:
+    n, m = (200_000, 20)
+    ds = synthetic.synt_uni(n, m, seed=0)
+    rng = np.random.default_rng(1)
+    queries = [synthetic.selectivity_targeted_query(ds, 1e-3, rng)
+               for _ in range(30)]
+
+    # scalar baseline: single-core numpy (row-major, early-break-free)
+    rows = ds.rows()
+    import time
+    for _ in range(2):
+        q = queries[0]
+        (np.logical_and(rows >= q.lower, rows <= q.upper)).all(1).nonzero()
+    t0 = time.perf_counter()
+    for q in queries:
+        (np.logical_and(rows >= q.lower, rows <= q.upper)).all(1).nonzero()
+    dt = (time.perf_counter() - t0) / len(queries)
+    emit_row("fig4/scan_scalar_numpy", dt * 1e6, f"qps={1/dt:.1f}")
+
+    eng = MDRQEngine(ds, structures=("scan", "kdtree", "vafile"))
+    for meth in ("scan", "scan_vertical", "kdtree", "vafile"):
+        r = qps(eng, queries, meth)
+        emit_row(f"fig4/{meth}_vectorized", 1e6 / r, f"qps={r:.1f}")
+
+    # multi-device sharded scan (8 host devices, subprocess)
+    script = (
+        "import os;"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8';"
+        "os.environ['REPRO_KERNEL_BACKEND']='xla';"
+        "import numpy as np, time;"
+        "from repro.core import DistributedScan;"
+        "from repro.core.distributed import make_data_mesh;"
+        "from repro.data import synthetic;"
+        f"ds = synthetic.synt_uni({n}, {m}, seed=0);"
+        "d = DistributedScan(ds, mesh=make_data_mesh(8));"
+        "rng = np.random.default_rng(1);"
+        "qs = [synthetic.selectivity_targeted_query(ds, 1e-3, rng) for _ in range(30)];"
+        "[d.query(q) for q in qs[:3]];"
+        "t0 = time.perf_counter();"
+        "[d.query(q) for q in qs];"
+        "dt = (time.perf_counter() - t0) / len(qs);"
+        "print('RESULT', dt)"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=900, env=env)
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT"):
+            dt = float(line.split()[1])
+            emit_row("fig4/scan_vectorized_8dev", dt * 1e6, f"qps={1/dt:.1f}")

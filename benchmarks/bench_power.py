@@ -1,0 +1,18 @@
+"""Fig. 9: POWER (DEBS-2012-shaped) real-world-skew dataset, size sweep."""
+import numpy as np
+
+from benchmarks.common import emit_row, qps
+from repro.core import MDRQEngine
+from repro.data import synthetic
+
+
+def run(quick: bool = True) -> None:
+    sizes = (10_000, 100_000, 400_000) if quick else (10_000, 100_000, 1_000_000, 10_000_000)
+    for n in sizes:
+        ds = synthetic.power(n, seed=0)
+        eng = MDRQEngine(ds, structures=("scan", "kdtree", "vafile"))
+        queries = synthetic.workload(ds, 15, seed=5)
+        sel = float(np.mean([ds.selectivity(q) for q in queries[:5]]))
+        for meth in ("scan", "kdtree", "vafile"):
+            r = qps(eng, queries, meth)
+            emit_row(f"fig9/n{n}/{meth}", 1e6 / r, f"qps={r:.1f};sel={sel:.4f}")

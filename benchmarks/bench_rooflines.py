@@ -1,0 +1,28 @@
+"""Deliverable (g): per-cell roofline terms from the dry-run artifacts."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit_row
+
+
+def run(quick: bool = True) -> None:
+    pat = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun",
+                       "*.json")
+    files = sorted(glob.glob(pat))
+    if not files:
+        emit_row("roofline/none", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}{r.get('tag','')}"
+        if r.get("status") != "ok":
+            emit_row(name, 0.0, f"skipped:{r.get('reason','?')[:60]}")
+            continue
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        ratio = r.get("useful_flops_ratio") or 0.0
+        emit_row(name, step_s * 1e6,
+                 f"dominant={r['dominant']};compute_s={r['compute_s']:.4f};"
+                 f"memory_s={r['memory_s']:.4f};collective_s={r['collective_s']:.4f};"
+                 f"useful_flops_ratio={ratio:.3f}")

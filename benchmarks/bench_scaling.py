@@ -1,0 +1,37 @@
+"""Fig. 11: scaling vs #parallel units (1..8 host devices, sharded scan)."""
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit_row
+
+SCRIPT = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={k}'
+os.environ['REPRO_KERNEL_BACKEND'] = 'xla'
+import numpy as np, time
+from repro.core import DistributedScan
+from repro.core.distributed import make_data_mesh
+from repro.data import gmrqb
+ds = gmrqb.build(200000, seed=0)
+d = DistributedScan(ds, mesh=make_data_mesh({k}))
+rng = np.random.default_rng(1)
+qs = [gmrqb.template(int(rng.integers(1, 8)), rng, ds) for _ in range(20)]
+[d.query(q) for q in qs[:3]]
+t0 = time.perf_counter()
+[d.query(q) for q in qs]
+print('RESULT', (time.perf_counter() - t0) / len(qs))
+"""
+
+
+def run(quick: bool = True) -> None:
+    for k in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src"
+        env.pop("XLA_FLAGS", None)
+        r = subprocess.run([sys.executable, "-c", SCRIPT.format(k=k)],
+                           capture_output=True, text=True, timeout=900, env=env)
+        for line in r.stdout.splitlines():
+            if line.startswith("RESULT"):
+                dt = float(line.split()[1])
+                emit_row(f"fig11/devices{k}/scan", dt * 1e6, f"qps={1/dt:.1f}")

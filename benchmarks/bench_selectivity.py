@@ -1,0 +1,33 @@
+"""Fig. 6: throughput vs query selectivity + measured break-even point —
+the paper's headline experiment (break-even ~1% on 1M x 5)."""
+import numpy as np
+
+from benchmarks.common import emit_row, qps
+from repro.core import MDRQEngine
+from repro.data import synthetic
+
+SELS = (1e-5, 1e-4, 1e-3, 1e-2, 0.05, 0.2, 0.5)
+
+
+def run(quick: bool = True) -> None:
+    n = 200_000 if quick else 1_000_000
+    ds = synthetic.synt_uni(n, 5, seed=0)
+    eng = MDRQEngine(ds)
+    rng = np.random.default_rng(2)
+    scan_t, kd_t = {}, {}
+    for sel in SELS:
+        queries = [synthetic.selectivity_targeted_query(ds, sel, rng)
+                   for _ in range(20)]
+        meas = float(np.mean([ds.selectivity(q) for q in queries[:5]]))
+        for meth in ("scan", "kdtree", "rstar", "vafile"):
+            r = qps(eng, queries, meth)
+            emit_row(f"fig6/sel{sel:g}/{meth}", 1e6 / r,
+                     f"qps={r:.1f};measured_sel={meas:.6f}")
+            if meth == "scan":
+                scan_t[sel] = 1.0 / r
+            if meth == "kdtree":
+                kd_t[sel] = 1.0 / r
+    # measured break-even: first selectivity where the scan beats the kd-tree
+    be = next((s for s in SELS if kd_t[s] >= scan_t[s]), None)
+    emit_row("fig6/break_even_selectivity", 0.0,
+             f"break_even<={be};paper=0.01")

@@ -1,0 +1,49 @@
+"""Shared benchmark utilities.
+
+All benchmarks execute with REPRO_KERNEL_BACKEND=xla (set by run.py before
+any repro import): interpret-mode Pallas runs the grid as a Python loop, so
+the XLA path — semantically identical to the kernels, validated in tests —
+is the honest CPU throughput proxy. On a TPU the same harness times Mosaic.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+
+def time_workload(fn: Callable[[], object], n_warm: int = 2, n_iter: int = 5
+                  ) -> float:
+    """Median seconds per call of fn()."""
+    for _ in range(n_warm):
+        fn()
+    ts = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run_queries(engine, queries, method: str) -> float:
+    """Total seconds to run all queries with the given method (one pass)."""
+    t0 = time.perf_counter()
+    for q in queries:
+        engine.query(q, method)
+    return time.perf_counter() - t0
+
+
+def qps(engine, queries, method: str, n_warm: int = 3) -> float:
+    """Queries/second after warmup (the paper's throughput metric, §7.1.2)."""
+    for q in queries[:n_warm]:
+        engine.query(q, method)
+    dt = run_queries(engine, queries, method)
+    return len(queries) / dt
+
+
+CSV_HEADER = "name,us_per_call,derived"
+
+
+def emit_row(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.2f},{derived}", flush=True)

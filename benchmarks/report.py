@@ -1,0 +1,73 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(mesh: str, tag: str = "") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") == mesh and r.get("tag", "") == tag:
+            out.append(r)
+    return out
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 1e9:
+        return f"{b/1e9:.1f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b/1e3:.0f}K"
+
+
+def roofline_table(mesh: str = "16x16", tag: str = "") -> str:
+    rows = [
+        "| arch | shape | kind | compute (s) | memory (s) | collective (s) | "
+        "dominant | useful-flops | peak temp/dev | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh, tag):
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — | "
+                        f"skipped: {r.get('reason','')[:70]} |")
+            continue
+        temp = r.get("memory_analysis", {}).get("temp_size_in_bytes", 0)
+        u = r.get("useful_flops_ratio")
+        note = ""
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{u:.2f} | {fmt_bytes(temp)} | {note} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(mesh: str = "16x16") -> str:
+    rows = [
+        "| arch | shape | status | compile (s) | FLOPs/dev | HLO bytes/dev | "
+        "collective bytes/dev (AR/AG/RS/A2A/CP) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped | — | — | — | — |")
+            continue
+        c = r["collectives_by_op"]
+        coll = "/".join(fmt_bytes(c.get(k, 0)) for k in
+                        ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']:.1f} | "
+            f"{r['flops_per_device']:.3e} | {fmt_bytes(r['bytes_per_device'])} | {coll} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    print(roofline_table(mesh) if which == "roofline" else dryrun_table(mesh))

@@ -1,0 +1,146 @@
+"""Roofline-term extraction from dry-run compiled artifacts.
+
+Three terms per (arch x shape x mesh) cell — TPU v5e targets:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective = collective_bytes_per_device / link_bw    (~50 GB/s ICI)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-partition module after
+SPMD). Collective bytes are parsed from the post-partitioning HLO text: we sum
+the *result* shapes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute instruction (documented convention: result
+bytes ~ bytes crossing the link per device per step; all-reduce counted 2x for
+the reduce+broadcast halves of a ring).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[16,4096,960]{2,1,0}" or "f32[128]"  (shape part of an HLO result)
+_SHAPE_RE = re.compile(r"(pred|[sucf]\d+|bf16)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every shape literal in an HLO result type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes per collective op type from post-SPMD HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # instruction lines look like: "%name = TYPE op-name(...)" or fused.
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", s)
+        if not m:
+            continue
+        rest = m.group(1)
+        for op in _COLLECTIVES:
+            # match the op as the instruction verb: "... = <shape> all-reduce("
+            if re.search(rf"\b{op}(?:-start|-done)?\(", rest):
+                # result type precedes the verb
+                type_part = rest.split(op)[0]
+                if op.endswith("done") or "-done(" in rest:
+                    continue
+                out[op] += _shape_bytes(type_part)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    collectives: dict[str, int]
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        # all-reduce moves ~2x its payload on a ring (reduce + broadcast)
+        ar2 = self.collectives.get("all-reduce", 0)
+        return (self.collective_bytes + ar2) / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def summary(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes,
+            "collectives_by_op": self.collectives,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def extrapolate(rl1: "Roofline", rl2: "Roofline", units: int) -> "Roofline":
+    """cost(L) = cost(1) + (L-1) * (cost(2) - cost(1)) — exact for homogeneous
+    layer stacks (constant terms: embed/unembed/loss; linear terms: layers)."""
+    k = units - 1
+
+    def ext(a, b):
+        return a + k * (b - a)
+
+    coll = {op: int(ext(rl1.collectives.get(op, 0), rl2.collectives.get(op, 0)))
+            for op in set(rl1.collectives) | set(rl2.collectives)}
+    coll = {op: max(0, v) for op, v in coll.items()}
+    return Roofline(
+        max(0.0, ext(rl1.flops_per_device, rl2.flops_per_device)),
+        max(0.0, ext(rl1.bytes_per_device, rl2.bytes_per_device)),
+        float(sum(coll.values())), coll)
+
+
+def from_compiled(compiled, hlo_text: Optional[str] = None) -> Roofline:
+    """Build roofline terms from a compiled executable."""
+    costs = compiled.cost_analysis() or {}
+    if isinstance(costs, list):  # older jax returns [dict]
+        costs = costs[0] if costs else {}
+    flops = float(costs.get("flops", 0.0))
+    byts = float(costs.get("bytes accessed", costs.get("bytes_accessed", 0.0)))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text)
+    return Roofline(flops, byts, float(sum(coll.values())), coll)
+
+
+def model_flops(cfg, tokens: float, train: bool) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); forward-only = 2*N*D."""
+    counts = cfg.param_counts()
+    mult = 6.0 if train else 2.0
+    return mult * counts["active"] * tokens

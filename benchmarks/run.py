@@ -1,0 +1,60 @@
+import os
+os.environ.setdefault("REPRO_KERNEL_BACKEND", "xla")  # see common.py
+
+"""Benchmark runner — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick sizes (CPU box)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
+  PYTHONPATH=src python -m benchmarks.run --only fig6,fig10
+
+Prints ``name,us_per_call,derived`` CSV rows. The roofline section reads the
+dry-run artifacts under results/dryrun (run repro.launch.dryrun first).
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import CSV_HEADER
+
+SECTIONS = [
+    ("fig4", "benchmarks.bench_hw_features"),
+    ("fig5", "benchmarks.bench_dimensionality"),
+    ("fig6", "benchmarks.bench_selectivity"),
+    ("fig7", "benchmarks.bench_dataset_size"),
+    ("fig8", "benchmarks.bench_clusters"),
+    ("fig9", "benchmarks.bench_power"),
+    ("fig10", "benchmarks.bench_gmrqb"),
+    ("fig11", "benchmarks.bench_scaling"),
+    ("mem", "benchmarks.bench_memory"),
+    ("roofline", "benchmarks.bench_rooflines"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--only", default="", help="comma-separated section names")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    print(CSV_HEADER, flush=True)
+    failures = 0
+    for name, module in SECTIONS:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            import importlib
+            mod = importlib.import_module(module)
+            mod.run(quick=not args.full)
+            print(f"# section {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# section {name} FAILED", flush=True)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

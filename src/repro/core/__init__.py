@@ -1,0 +1,24 @@
+"""repro.core — the paper's contribution: MDRQ access paths on modern hardware.
+
+Public API:
+  * types: ``RangeQuery``, ``Dataset`` + numpy oracles
+  * engines: ``MDRQEngine`` (facade), ``build_columnar_scan``, ``build_kdtree``,
+    ``build_rstar``, ``build_vafile``, ``DistributedScan``
+  * planning: ``Planner``, ``Histograms``, ``CostModel``
+"""
+from repro.core.types import Dataset, RangeQuery, match_ids_np, match_mask_np
+from repro.core.engine import MDRQEngine, ALL_METHODS
+from repro.core.scan import build_columnar_scan, build_row_scan
+from repro.core.kdtree import build_kdtree
+from repro.core.rstar import build_rstar
+from repro.core.vafile import build_vafile
+from repro.core.planner import CostModel, Histograms, Planner
+from repro.core.distributed import DistributedScan, make_data_mesh
+
+__all__ = [
+    "Dataset", "RangeQuery", "match_ids_np", "match_mask_np",
+    "MDRQEngine", "ALL_METHODS",
+    "build_columnar_scan", "build_row_scan", "build_kdtree", "build_rstar",
+    "build_vafile", "CostModel", "Histograms", "Planner",
+    "DistributedScan", "make_data_mesh",
+]

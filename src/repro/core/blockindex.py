@@ -1,0 +1,185 @@
+"""Shared machinery for blocked (two-phase) MDIS on TPU.
+
+Both tree MDIS in this framework — the blocked kd-tree and the packed STR
+R*-tree — reduce at query time to the same TPU-native two-phase plan
+(DESIGN.md §2):
+
+  phase 1 (prune):  vectorized MBR-overlap tests over a small hierarchy of
+                    per-block bounding boxes (device, one jit call);
+  phase 2 (refine): the ``range_scan_visit`` Pallas kernel scans *only* the
+                    surviving leaf blocks (grid size = #survivors, so pruned
+                    blocks cost nothing — the TPU analogue of subtree pruning).
+
+What distinguishes the structures is the *build*: how objects are permuted
+into leaf blocks (median splits vs sort-tile-recursive vs storage order).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import types as T
+from repro.kernels import ops
+
+
+def build_hierarchy(
+    leaf_lo: np.ndarray, leaf_hi: np.ndarray, fanout: int = 64
+) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Build MBR levels bottom-up from leaf MBRs.
+
+    Args:
+      leaf_lo, leaf_hi: (m, n_leaves) per-leaf bounding boxes (columnar).
+      fanout: children per inner node.
+
+    Returns:
+      Levels from root to leaves: [(lo, hi), ...] each (m, n_nodes_level).
+    """
+    levels = [(leaf_lo, leaf_hi)]
+    lo, hi = leaf_lo, leaf_hi
+    while lo.shape[1] > 1:
+        n_nodes = lo.shape[1]
+        n_up = -(-n_nodes // fanout)
+        pad = n_up * fanout - n_nodes
+        lo_p = np.pad(lo, ((0, 0), (0, pad)), constant_values=np.inf)
+        hi_p = np.pad(hi, ((0, 0), (0, pad)), constant_values=-np.inf)
+        lo = lo_p.reshape(lo.shape[0], n_up, fanout).min(axis=2)
+        hi = hi_p.reshape(hi.shape[0], n_up, fanout).max(axis=2)
+        levels.append((lo, hi))
+        if n_up == 1:
+            break
+    return levels[::-1]  # root first
+
+
+@functools.partial(jax.jit, static_argnames=("fanout",))
+def prune_hierarchy(
+    levels_lo: tuple[jax.Array, ...],
+    levels_hi: tuple[jax.Array, ...],
+    qlo: jax.Array,
+    qhi: jax.Array,
+    fanout: int,
+) -> jax.Array:
+    """Top-down vectorized MBR pruning.
+
+    Args:
+      levels_lo/hi: root-first tuples of (m, n_nodes) MBR bounds.
+      qlo, qhi: (m, 1) query bounds.
+
+    Returns:
+      (n_leaves,) bool — leaves whose MBR intersects the query box.
+    """
+    active = None
+    for lo, hi in zip(levels_lo, levels_hi):
+        overlap = jnp.all(jnp.logical_and(hi >= qlo, lo <= qhi), axis=0)
+        if active is None:
+            active = overlap
+        else:
+            parents = jnp.repeat(active, fanout)[: overlap.shape[0]]
+            active = jnp.logical_and(parents, overlap)
+    return active
+
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+@dataclasses.dataclass
+class BlockedIndex:
+    """A built blocked MDIS instance (query-side shared by kd-tree / R-tree).
+
+    Attributes:
+      name: structure name ("kdtree" | "rstar").
+      data_dev: (m_pad, n_pad) permuted columnar data on device.
+      perm: (n,) original object id of each permuted position.
+      levels: root-first MBR hierarchy, device arrays.
+      tile_n: leaf block size (objects per leaf).
+      m, n: logical sizes.
+    """
+
+    name: str
+    data_dev: jax.Array
+    perm: np.ndarray
+    levels_lo: tuple[jax.Array, ...]
+    levels_hi: tuple[jax.Array, ...]
+    fanout: int
+    tile_n: int
+    m: int
+    n: int
+
+    # -- stats of the last query (for benchmarks / planner calibration) --
+    last_visited_blocks: int = 0
+
+    @property
+    def n_leaves(self) -> int:
+        return self.data_dev.shape[1] // self.tile_n
+
+    @property
+    def nbytes_index(self) -> int:
+        """Extra memory vs a plain scan (MBR hierarchy; paper §7.2 metric)."""
+        return sum(int(np.prod(l.shape)) * 4 * 2 for l in self.levels_lo)
+
+    def query_leaf_mask(self, q: T.RangeQuery) -> np.ndarray:
+        """Phase 1: (n_leaves,) bool survivors of the hierarchy prune."""
+        qlo, qhi = ops.query_bounds_device(q, self.m, jnp.float32)
+        mask = prune_hierarchy(self.levels_lo, self.levels_hi, qlo, qhi, self.fanout)
+        return np.asarray(mask)
+
+    def query(self, q: T.RangeQuery) -> np.ndarray:
+        """Full query -> sorted original ids of matching objects."""
+        leaf_mask = self.query_leaf_mask(q)
+        survivors = np.nonzero(leaf_mask)[0].astype(np.int32)
+        self.last_visited_blocks = int(survivors.size)
+        if survivors.size == 0:
+            return np.empty((0,), np.int64)
+        # Pad the visit list to a pow2 bucket to bound jit retraces.
+        n_visit = _next_pow2(survivors.size)
+        ids = np.full((n_visit,), -1, np.int32)
+        ids[: survivors.size] = survivors
+        qlo, qhi = ops.query_bounds_device(q, self.data_dev.shape[0], self.data_dev.dtype)
+        masks = ops.range_scan_visit(self.data_dev, jnp.asarray(ids), qlo, qhi,
+                                     tile_n=self.tile_n)
+        masks = np.asarray(masks)[: survivors.size]  # (v, tile_n)
+        # Map (block, offset) -> permuted position -> original id.
+        pos = (survivors[:, None] * self.tile_n + np.arange(self.tile_n)[None, :])
+        pos = pos[masks > 0]
+        pos = pos[pos < self.n]  # drop object padding
+        return np.sort(self.perm[pos]).astype(np.int64)
+
+
+def finish_build(
+    name: str,
+    cols_perm: np.ndarray,
+    perm: np.ndarray,
+    tile_n: int,
+    fanout: int,
+    dtype=jnp.float32,
+) -> BlockedIndex:
+    """Common tail of every build: pad, compute leaf MBRs, build hierarchy.
+
+    Args:
+      cols_perm: (m, n) columnar data already permuted into leaf order.
+      perm: (n,) original id per permuted position.
+    """
+    m, n = cols_perm.shape
+    padded, _, _ = ops.prepare_columnar(cols_perm, tile_n=tile_n)
+    n_leaves = padded.shape[1] // tile_n
+    blocks = padded[:m].reshape(m, n_leaves, tile_n)
+    # +inf object padding poisons MBR lows/highs of the last block; mask it.
+    leaf_lo = np.where(np.isposinf(blocks), np.inf, blocks).min(axis=2)
+    leaf_hi = np.where(np.isposinf(blocks), -np.inf, blocks).max(axis=2)
+    levels = build_hierarchy(leaf_lo, leaf_hi, fanout=fanout)
+    return BlockedIndex(
+        name=name,
+        data_dev=jnp.asarray(padded, dtype=dtype),
+        perm=np.asarray(perm),
+        levels_lo=tuple(jnp.asarray(lo) for lo, _ in levels),
+        levels_hi=tuple(jnp.asarray(hi) for _, hi in levels),
+        fanout=fanout,
+        tile_n=tile_n,
+        m=m,
+        n=n,
+    )

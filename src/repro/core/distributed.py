@@ -1,0 +1,137 @@
+"""Distributed MDRQ execution — horizontal partitioning over devices.
+
+The paper's horizontal partitioning (§3.1) assigns n/t objects to each of t
+threads, runs the same search per partition, and concatenates partial results.
+The TPU mapping (DESIGN.md §2): the object axis of the columnar array shards
+over the ``data`` mesh axis via ``shard_map``; every device runs the identical
+Pallas scan on its local (m_pad, n_pad/p) shard. The paper's "concatenate
+partial result sets" becomes a no-op — the output mask inherits the input
+sharding — and the only collective in the system is an optional ``psum`` for
+global match counts. Load balancing is inherited from random object placement,
+exactly as in the paper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import types as T
+from repro.kernels import ops
+from repro.kernels import range_scan as _rs
+
+
+def make_data_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D mesh over all (or the first k) local devices: axis 'data'."""
+    devs = jax.devices()
+    k = n_devices or len(devs)
+    return jax.make_mesh((k,), ("data",), devices=devs[:k])
+
+
+def shard_columnar(mesh: Mesh, padded_cols: np.ndarray, tile_n: int = 1024) -> jax.Array:
+    """Place (m_pad, n_pad) columnar data sharded over objects.
+
+    n_pad must divide by (#devices * tile_n) — callers pad with +inf sentinels
+    via ``ops.prepare_columnar`` using tile_n * axis_size.
+    """
+    n_dev = mesh.shape["data"]
+    m_pad, n_pad = padded_cols.shape
+    assert n_pad % (n_dev * tile_n) == 0, (n_pad, n_dev, tile_n)
+    sharding = NamedSharding(mesh, P(None, "data"))
+    return jax.device_put(jnp.asarray(padded_cols), sharding)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "tile_n", "interpret"))
+def distributed_mask(
+    mesh: Mesh,
+    data_sharded: jax.Array,
+    qlo: jax.Array,
+    qhi: jax.Array,
+    *,
+    tile_n: int = 1024,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Sharded match mask: each device scans its own object shard."""
+    if interpret is None:
+        interpret = ops.default_interpret()
+
+    def local_scan(data_local, lo, up):
+        if ops.use_xla():
+            from repro.kernels import ref as _ref
+            return _ref.range_scan_ref(data_local, lo, up)
+        return _rs.range_scan_tiles(data_local, lo, up, tile_n=tile_n,
+                                    interpret=interpret)
+
+    fn = jax.shard_map(
+        local_scan,
+        mesh=mesh,
+        in_specs=(P(None, "data"), P(), P()),
+        out_specs=P("data"),
+        check_vma=False,  # pallas_call outputs carry no vma metadata
+    )
+    return fn(data_sharded, qlo, qhi)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "tile_n", "interpret"))
+def distributed_count(
+    mesh: Mesh,
+    data_sharded: jax.Array,
+    qlo: jax.Array,
+    qhi: jax.Array,
+    *,
+    tile_n: int = 1024,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Global match count — one psum over the data axis (the paper's result
+    concatenation reduced to its cheapest sufficient collective)."""
+    if interpret is None:
+        interpret = ops.default_interpret()
+
+    def local_count(data_local, lo, up):
+        if ops.use_xla():
+            from repro.kernels import ref as _ref
+            mask = _ref.range_scan_ref(data_local, lo, up)
+        else:
+            mask = _rs.range_scan_tiles(data_local, lo, up, tile_n=tile_n,
+                                        interpret=interpret)
+        return jax.lax.psum(mask.astype(jnp.int32).sum(), "data")
+
+    fn = jax.shard_map(
+        local_count,
+        mesh=mesh,
+        in_specs=(P(None, "data"), P(), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(data_sharded, qlo, qhi)
+
+
+class DistributedScan:
+    """Horizontally partitioned scan over a device mesh (build-once facade)."""
+
+    def __init__(self, dataset: T.Dataset, mesh: Mesh | None = None, tile_n: int = 1024):
+        self.mesh = mesh or make_data_mesh()
+        self.tile_n = tile_n
+        n_dev = self.mesh.shape["data"]
+        padded, self.m, self.n = ops.prepare_columnar(
+            dataset.cols, tile_n=tile_n * n_dev
+        )
+        self.m_pad = padded.shape[0]
+        self.data = shard_columnar(self.mesh, padded, tile_n=tile_n)
+
+    def mask(self, q: T.RangeQuery) -> np.ndarray:
+        qlo, qhi = ops.query_bounds_device(q, self.m_pad, self.data.dtype)
+        out = distributed_mask(self.mesh, self.data, qlo, qhi, tile_n=self.tile_n)
+        return np.asarray(out)[: self.n] > 0
+
+    def query(self, q: T.RangeQuery) -> np.ndarray:
+        return np.nonzero(self.mask(q))[0].astype(np.int64)
+
+    def count(self, q: T.RangeQuery) -> int:
+        qlo, qhi = ops.query_bounds_device(q, self.m_pad, self.data.dtype)
+        total = distributed_count(self.mesh, self.data, qlo, qhi, tile_n=self.tile_n)
+        # subtract sentinel padding matches (there are none: +inf never matches)
+        return int(total)

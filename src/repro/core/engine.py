@@ -1,0 +1,112 @@
+"""MDRQEngine — the unified facade over all access paths.
+
+Ingests a columnar dataset, builds the requested structures (scan is always
+available; kd-tree / R*-tree / VA-file optional), and answers range queries
+either with an explicitly chosen method or through the planner ("auto").
+This is the paper's experimental matrix (§7.1.3) as a composable component —
+and the interface the framework's data pipeline uses for sample selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import types as T
+from repro.core import scan as scan_mod
+from repro.core.kdtree import build_kdtree
+from repro.core.rstar import build_rstar
+from repro.core.vafile import build_vafile
+from repro.core.planner import CostModel, Histograms, Planner
+
+ALL_METHODS = ("scan", "scan_vertical", "rowscan", "kdtree", "rstar", "vafile")
+
+
+@dataclasses.dataclass
+class QueryStats:
+    method: str
+    seconds: float
+    n_results: int
+    est_selectivity: float
+
+
+class MDRQEngine:
+    """Build-once, query-many MDRQ engine (analytical workloads, §1)."""
+
+    def __init__(
+        self,
+        dataset: T.Dataset,
+        structures: tuple[str, ...] = ("scan", "kdtree", "rstar", "vafile"),
+        tile_n: int = 1024,
+        rowscan: bool = False,
+    ):
+        self.dataset = dataset
+        self.tile_n = tile_n
+        self.columnar = scan_mod.build_columnar_scan(dataset, tile_n=tile_n)
+        self.rowscan = scan_mod.build_row_scan(dataset) if rowscan else None
+        self.kdtree = build_kdtree(dataset, tile_n=tile_n) if "kdtree" in structures else None
+        self.rstar = build_rstar(dataset, tile_n=tile_n) if "rstar" in structures else None
+        self.vafile = build_vafile(dataset, tile_n=tile_n) if "vafile" in structures else None
+        self.hist = Histograms.build(dataset)
+        available = ["scan", "scan_vertical"]
+        if self.kdtree is not None:
+            available.append("kdtree")
+        if self.vafile is not None:
+            available.append("vafile")
+        self.planner = Planner(
+            self.hist, CostModel(n=dataset.n, m=dataset.m, tile_n=tile_n),
+            available=tuple(available),
+        )
+        self.last_stats: Optional[QueryStats] = None
+
+    def memory_report(self) -> dict[str, int]:
+        """Bytes of auxiliary structures per method (paper §7.2 comparison)."""
+        rep = {"data": self.dataset.nbytes, "scan": 0}
+        if self.kdtree is not None:
+            rep["kdtree"] = self.kdtree.nbytes_index
+        if self.rstar is not None:
+            rep["rstar"] = self.rstar.nbytes_index
+        if self.vafile is not None:
+            rep["vafile"] = self.vafile.nbytes_index
+        return rep
+
+    def query(self, q: T.RangeQuery, method: str = "auto") -> np.ndarray:
+        """Execute q -> sorted matching ids; records QueryStats."""
+        if q.m != self.dataset.m:
+            raise ValueError(f"query dims {q.m} != dataset dims {self.dataset.m}")
+        if method == "auto":
+            plan = self.planner.explain(q)
+            method, est = plan.method, plan.est_selectivity
+        else:
+            est = self.planner.hist.selectivity(q)
+        t0 = time.perf_counter()
+        ids = self._dispatch(q, method)
+        dt = time.perf_counter() - t0
+        self.last_stats = QueryStats(method=method, seconds=dt,
+                                     n_results=int(ids.size), est_selectivity=est)
+        return ids
+
+    def _dispatch(self, q: T.RangeQuery, method: str) -> np.ndarray:
+        if method == "scan":
+            return self.columnar.query(q)
+        if method == "scan_vertical":
+            return self.columnar.query_partial(q)
+        if method == "rowscan":
+            if self.rowscan is None:
+                raise ValueError("rowscan not built (pass rowscan=True)")
+            return self.rowscan.query(q)
+        if method == "kdtree":
+            if self.kdtree is None:
+                raise ValueError("kdtree not built")
+            return self.kdtree.query(q)
+        if method == "rstar":
+            if self.rstar is None:
+                raise ValueError("rstar not built")
+            return self.rstar.query(q)
+        if method == "vafile":
+            if self.vafile is None:
+                raise ValueError("vafile not built")
+            return self.vafile.query(q)
+        raise ValueError(f"unknown method {method!r}; options: {ALL_METHODS} or 'auto'")

@@ -1,0 +1,61 @@
+"""Packed STR R*-tree (TPU adaptation of the paper's §2.2.1 / §5.1).
+
+The paper uses libspatialindex's R*-tree with insert-time forced re-insertion
+splits. For the analytical workloads the paper targets (bulk loads, rare
+updates — §1, and the paper itself reports insert order does not change its
+results, §7.1.2 fn. 14), the TPU-native equivalent is a *bulk-loaded packed*
+R-tree: Sort-Tile-Recursive (STR, Leutenegger et al. 1997) tiles the space so
+leaf MBRs are near-minimal-overlap — the same objective the R*-tree's
+re-insertion heuristic optimizes incrementally — while the resulting structure
+is a dense, pointer-free array of MBRs that the VPU can prune breadth-first.
+Cache-line node alignment (paper §5.1 adapts node capacity to 64B lines)
+becomes VMEM tile alignment: leaf capacity = ``tile_n`` objects, inner fanout
+sized so one level fits a handful of VREGs.
+
+Query: shared two-phase plan (see ``blockindex``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import types as T
+from repro.core.blockindex import BlockedIndex, finish_build
+
+
+def _str_order(cols: np.ndarray, idx: np.ndarray, dims: list[int], tile_n: int) -> list[np.ndarray]:
+    """Sort-Tile-Recursive: sort by dims[0], slice, recurse within slices."""
+    if idx.size <= tile_n or not dims:
+        return [idx]
+    d = dims[0]
+    srt = idx[np.argsort(cols[d, idx], kind="stable")]
+    # Number of slabs: objects-per-slab such that remaining dims can tile into
+    # tile_n leaves — the standard STR S = ceil((n/tile_n)^(1/k)) slab count.
+    n_leaves = -(-idx.size // tile_n)
+    slabs = int(np.ceil(n_leaves ** (1.0 / len(dims))))
+    slab_size = -(-idx.size // slabs)
+    out: list[np.ndarray] = []
+    for s in range(slabs):
+        part = srt[s * slab_size : (s + 1) * slab_size]
+        if part.size:
+            out.extend(_str_order(cols, part, dims[1:], tile_n))
+    return out
+
+
+def build_rstar(
+    dataset: T.Dataset, tile_n: int = 1024, fanout: int = 64, sort_dims: int | None = None
+) -> BlockedIndex:
+    """Bulk-load a packed STR R-tree.
+
+    Args:
+      dataset: columnar dataset.
+      tile_n: leaf capacity (objects per MBR leaf).
+      fanout: inner-level fanout.
+      sort_dims: how many leading dimensions STR sorts by (default: all, capped
+        at 6 — beyond that the per-dim slab count degenerates to 1).
+    """
+    cols = dataset.cols
+    k = min(dataset.m, 6 if sort_dims is None else sort_dims)
+    order = _str_order(cols, np.arange(dataset.n), list(range(k)), tile_n)
+    perm = np.concatenate(order)
+    cols_perm = cols[:, perm]
+    return finish_build("rstar", cols_perm, perm, tile_n, fanout)

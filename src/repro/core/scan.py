@@ -1,0 +1,112 @@
+"""Parallel scans (TPU adaptation of the paper's §3 / §5.4 / §5.5).
+
+Three scan flavors, mirroring the paper's contestants:
+
+  * ``ColumnarScan.query``          — complete-match scan over the columnar
+    layout via the ``range_scan`` Pallas kernel (vectorized, all dims fused).
+  * ``ColumnarScan.query_partial``  — partial-match scan via the
+    ``range_scan_vertical`` kernel: touches only queried dimensions' columns
+    (the paper's vertical-partitioning advantage, §5.5).
+  * ``RowScan.query``               — row-major layout scan (the paper's
+    horizontal partitioning, §5.4) — kept for the layout ablation.
+
+The paper's multi-threading dimension (horizontal partitioning over t threads)
+maps to sharding over devices and lives in ``core.distributed``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import types as T
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class ColumnarScan:
+    """Full-scan engine over dimension-major data."""
+
+    data_dev: jax.Array  # (m_pad, n_pad)
+    m: int
+    n: int
+    tile_n: int = 1024
+
+    @property
+    def nbytes_index(self) -> int:
+        return 0  # a scan needs no auxiliary structures (paper §8)
+
+    def mask(self, q: T.RangeQuery) -> np.ndarray:
+        """(n,) bool match mask (complete or partial match)."""
+        qlo, qhi = ops.query_bounds_device(q, self.data_dev.shape[0], self.data_dev.dtype)
+        out = ops.range_scan(self.data_dev, qlo, qhi, tile_n=self.tile_n)
+        return np.asarray(out[: self.n]) > 0
+
+    def mask_partial(self, q: T.RangeQuery) -> np.ndarray:
+        """(n,) bool mask touching only the queried dimensions."""
+        dims = np.nonzero(q.dims_mask)[0].astype(np.int32)
+        if dims.size == 0:
+            return np.ones((self.n,), bool)
+        qlo, qhi = ops.query_bounds_device(q, self.data_dev.shape[0], self.data_dev.dtype)
+        out = ops.range_scan_vertical(
+            self.data_dev, jnp.asarray(dims), qlo, qhi, tile_n=self.tile_n
+        )
+        return np.asarray(out[: self.n]) > 0
+
+    def query(self, q: T.RangeQuery) -> np.ndarray:
+        return np.nonzero(self.mask(q))[0].astype(np.int64)
+
+    def query_partial(self, q: T.RangeQuery) -> np.ndarray:
+        return np.nonzero(self.mask_partial(q))[0].astype(np.int64)
+
+
+def build_columnar_scan(dataset: T.Dataset, tile_n: int = 1024) -> ColumnarScan:
+    padded, m, n = ops.prepare_columnar(dataset.cols, tile_n=tile_n)
+    return ColumnarScan(data_dev=jnp.asarray(padded), m=m, n=n, tile_n=tile_n)
+
+
+@dataclasses.dataclass
+class RowScan:
+    """Row-major layout scan (horizontal partitioning analogue)."""
+
+    data_dev: jax.Array  # (n_pad, m_pad)
+    m: int
+    n: int
+    tile_rows: int = 512
+
+    @property
+    def nbytes_index(self) -> int:
+        return 0
+
+    def mask(self, q: T.RangeQuery) -> np.ndarray:
+        qlo, qhi = ops.query_bounds_device(q, self.data_dev.shape[1], self.data_dev.dtype)
+        out = ops.range_scan_rows(
+            self.data_dev, qlo.T, qhi.T, tile_rows=self.tile_rows
+        )
+        return np.asarray(out[: self.n]) > 0
+
+    def query(self, q: T.RangeQuery) -> np.ndarray:
+        return np.nonzero(self.mask(q))[0].astype(np.int64)
+
+
+def build_row_scan(dataset: T.Dataset, tile_rows: int = 512) -> RowScan:
+    rows = dataset.rows()  # (n, m)
+    rows = T.pad_axis(rows, 1, 8, 0.0)       # dim padding: match-all bounds
+    rows = T.pad_axis(rows, 0, tile_rows, np.inf)  # object padding: never match
+    return RowScan(data_dev=jnp.asarray(rows), m=dataset.m, n=dataset.n,
+                   tile_rows=tile_rows)
+
+
+@jax.jit
+def xla_scan_mask(data_cm: jax.Array, qlo: jax.Array, qhi: jax.Array) -> jax.Array:
+    """Plain-XLA (non-Pallas) columnar scan — the 'unoptimized baseline' the
+    Pallas kernel is benchmarked against (paper's scalar-vs-SIMD axis)."""
+    ok = jnp.logical_and(data_cm >= qlo, data_cm <= qhi)
+    return jnp.all(ok, axis=0)
+
+
+def numpy_scan_ids(cols: np.ndarray, q: T.RangeQuery) -> np.ndarray:
+    """Single-core numpy scan — the host-side baseline."""
+    return T.match_ids_np(cols, q)

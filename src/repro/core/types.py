@@ -1,0 +1,168 @@
+"""Core datatypes for multidimensional range queries (MDRQ).
+
+Mirrors the paper's problem definition (§2.1):
+
+  * a dataset ``D`` of ``n`` objects with ``m`` float attributes,
+  * a (partial- or complete-match) range query ``q`` with per-dimension
+    predicates ``[lb_j, ub_j]``; un-queried dimensions use ``[-inf, +inf]``,
+  * a result = the set of identifiers of matching objects.
+
+The canonical device layout is **dimension-major (columnar)**, shape ``(m, n)``
+— the TPU-native realization of the paper's vertical partitioning (§3.2): the
+last (lane) dimension runs over objects so one VREG holds 128 objects of one
+attribute, and the AND-merge across dimensions happens in-register.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+NEG_INF = np.float32(-np.inf)
+POS_INF = np.float32(np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeQuery:
+    """A multidimensional range query (complete- or partial-match).
+
+    ``lower``/``upper`` always have length ``m``; dimensions not mentioned in
+    the query carry ``[-inf, +inf]`` (paper §2.1). ``dims_mask`` records which
+    dimensions are actually constrained — engines use it to skip un-queried
+    columns (the vertical-partitioning partial-match advantage, §3.2/§5.5).
+    """
+
+    lower: np.ndarray  # (m,) float32
+    upper: np.ndarray  # (m,) float32
+
+    def __post_init__(self):
+        lo = np.asarray(self.lower, dtype=np.float32)
+        up = np.asarray(self.upper, dtype=np.float32)
+        if lo.shape != up.shape or lo.ndim != 1:
+            raise ValueError(f"bad query bounds: {lo.shape} vs {up.shape}")
+        object.__setattr__(self, "lower", lo)
+        object.__setattr__(self, "upper", up)
+
+    @property
+    def m(self) -> int:
+        return self.lower.shape[0]
+
+    @property
+    def dims_mask(self) -> np.ndarray:
+        """(m,) bool — True where the dimension is actually constrained."""
+        return ~(np.isneginf(self.lower) & np.isposinf(self.upper))
+
+    @property
+    def n_queried_dims(self) -> int:
+        return int(self.dims_mask.sum())
+
+    @property
+    def is_complete_match(self) -> bool:
+        return bool(self.dims_mask.all())
+
+    @staticmethod
+    def complete(lower: Sequence[float], upper: Sequence[float]) -> "RangeQuery":
+        return RangeQuery(np.asarray(lower, np.float32), np.asarray(upper, np.float32))
+
+    @staticmethod
+    def partial(m: int, predicates: dict[int, tuple[float, float]]) -> "RangeQuery":
+        """Partial-match query: ``{dim: (lb, ub)}`` over an m-dim space."""
+        lo = np.full((m,), NEG_INF, np.float32)
+        up = np.full((m,), POS_INF, np.float32)
+        for j, (a, b) in predicates.items():
+            lo[j], up[j] = np.float32(a), np.float32(b)
+        return RangeQuery(lo, up)
+
+    def reorder(self, order: np.ndarray) -> "RangeQuery":
+        """Query with dimensions permuted by ``order`` (selectivity ordering)."""
+        return RangeQuery(self.lower[order], self.upper[order])
+
+
+@dataclasses.dataclass
+class Dataset:
+    """A columnar in-memory dataset: ``cols[j, i]`` = attribute j of object i.
+
+    ``row(i)`` and ``rows()`` give the row-major view (the paper's horizontal
+    layout) when needed.
+    """
+
+    cols: np.ndarray  # (m, n) float32
+
+    def __post_init__(self):
+        c = np.asarray(self.cols)
+        if c.ndim != 2:
+            raise ValueError(f"cols must be (m, n), got {c.shape}")
+        self.cols = np.ascontiguousarray(c, dtype=np.float32)
+
+    @property
+    def m(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.cols.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return self.cols.nbytes
+
+    def rows(self) -> np.ndarray:
+        return np.ascontiguousarray(self.cols.T)
+
+    @staticmethod
+    def from_rows(rows: np.ndarray) -> "Dataset":
+        rows = np.asarray(rows, np.float32)
+        return Dataset(np.ascontiguousarray(rows.T))
+
+    def selectivity(self, q: RangeQuery) -> float:
+        """Exact selectivity of ``q`` on this dataset (fraction in [0, 1])."""
+        return float(match_mask_np(self.cols, q).mean())
+
+
+def match_mask_np(cols: np.ndarray, q: RangeQuery) -> np.ndarray:
+    """Numpy oracle: (n,) bool mask of objects matching q. O(n·m)."""
+    lo = q.lower[:, None]
+    up = q.upper[:, None]
+    return np.logical_and(cols >= lo, cols <= up).all(axis=0)
+
+
+def match_ids_np(cols: np.ndarray, q: RangeQuery) -> np.ndarray:
+    """Numpy oracle: sorted identifiers of matching objects."""
+    return np.nonzero(match_mask_np(cols, q))[0].astype(np.int64)
+
+
+def mask_to_ids(mask) -> np.ndarray:
+    """Device/host mask -> sorted id array (host-side, dynamic shape)."""
+    return np.nonzero(np.asarray(mask))[0].astype(np.int64)
+
+
+def pad_axis(x: np.ndarray, axis: int, multiple: int, value) -> np.ndarray:
+    """Pad ``axis`` of x up to the next multiple of ``multiple`` with value."""
+    size = x.shape[axis]
+    target = -(-size // multiple) * multiple
+    if target == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - size)
+    return np.pad(x, widths, constant_values=value)
+
+
+def padded_query_bounds(
+    q: RangeQuery, m_padded: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Query bounds padded to ``m_padded`` dims with [-inf, +inf] (match-all)."""
+    lo = np.full((m_padded,), NEG_INF, np.float32)
+    up = np.full((m_padded,), POS_INF, np.float32)
+    lo[: q.m] = q.lower
+    up[: q.m] = q.upper
+    return lo, up
+
+
+def finite_query_bounds(lo: np.ndarray, up: np.ndarray, dtype=np.float32):
+    """Replace +-inf with the dtype's finite extrema (bf16 compare safety)."""
+    fin = np.finfo(np.dtype(dtype) if dtype != jnp.bfloat16 else np.float32)
+    lo = np.where(np.isneginf(lo), fin.min, lo).astype(np.float32)
+    up = np.where(np.isposinf(up), fin.max, up).astype(np.float32)
+    return lo, up

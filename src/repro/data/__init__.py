@@ -1,0 +1,12 @@
+"""repro.data — datasets, workloads, and the training data pipeline."""
+from repro.data.synthetic import (
+    power, random_pair_query, selectivity_targeted_query, synt_clust, synt_uni,
+    workload,
+)
+from repro.data.pipeline import DataConfig, FilteredTokenPipeline, default_filter
+
+__all__ = [
+    "power", "random_pair_query", "selectivity_targeted_query", "synt_clust",
+    "synt_uni", "workload", "DataConfig", "FilteredTokenPipeline",
+    "default_filter",
+]

@@ -1,0 +1,188 @@
+"""Jit'd public wrappers around the MDRQ Pallas kernels.
+
+Handles layout/padding policy (pad m to sublanes with match-all bounds, n to
+the tile size with +inf sentinel objects that never match), dtype casting of
+the bounds, and interpret-mode selection (interpret=True on CPU so the kernel
+body executes as the oracle-checked reference path; compiled Mosaic on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import types as T
+from repro.kernels import range_scan as _rs
+from repro.kernels import ref as _ref
+from repro.kernels import va_filter as _va
+
+import os
+
+# Kernel execution backend:
+#   auto      — Mosaic on TPU, interpret-mode Pallas on CPU (correctness path)
+#   interpret — force interpret-mode Pallas
+#   xla       — execute the ref.py jnp implementations (identical semantics).
+#               Benchmarks use this on CPU: interpret-mode runs the grid as a
+#               Python loop, so its wall-time says nothing about the kernel;
+#               the XLA path is the honest CPU proxy for throughput numbers.
+_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+
+
+def use_xla() -> bool:
+    return _BACKEND == "xla"
+
+
+def default_interpret() -> bool:
+    if _BACKEND == "interpret":
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def prepare_columnar(
+    cols: np.ndarray, tile_n: int = _rs.DEFAULT_TILE_N, dtype=jnp.float32
+) -> tuple[np.ndarray, int, int]:
+    """Pad (m, n) columnar data for the kernel.
+
+    Dim padding rows are 0.0 (queried with match-all bounds); object padding
+    columns are +inf (never match any finite upper bound).
+
+    Returns (padded array, m, n) with original sizes.
+    """
+    m, n = cols.shape
+    x = T.pad_axis(cols, 0, _rs.SUBLANES, 0.0)
+    x = T.pad_axis(x, 1, tile_n, np.inf)
+    return np.asarray(x, dtype=np.float32 if dtype == jnp.float32 else x.dtype), m, n
+
+
+def query_bounds_device(q: T.RangeQuery, m_pad: int, dtype) -> tuple[jax.Array, jax.Array]:
+    """(m_pad, 1) finite device bounds for a query (pad rows = match-all)."""
+    lo, up = T.padded_query_bounds(q, m_pad)
+    lo, up = T.finite_query_bounds(lo, up)
+    lo_d = jnp.asarray(lo, dtype=dtype).reshape(-1, 1)
+    up_d = jnp.asarray(up, dtype=dtype).reshape(-1, 1)
+    return lo_d, up_d
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def range_scan(
+    data_cm: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    tile_n: int = _rs.DEFAULT_TILE_N,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Full vectorized range scan over padded columnar data -> (n_pad,) int8."""
+    if use_xla():
+        return _ref.range_scan_ref(data_cm, lower, upper)
+    if interpret is None:
+        interpret = default_interpret()
+    return _rs.range_scan_tiles(
+        data_cm, lower, upper, tile_n=tile_n, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def range_scan_visit(
+    data_cm: jax.Array,
+    block_ids: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    tile_n: int = _rs.DEFAULT_TILE_N,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Scan only the listed tile ids -> (n_visit, tile_n) int8 masks."""
+    if use_xla():
+        m_pad, n_pad = data_cm.shape
+        blocks = data_cm.reshape(m_pad, n_pad // tile_n, tile_n).transpose(1, 0, 2)
+        return _ref.range_scan_blocks_ref(blocks, block_ids,
+                                          lower[:, 0], upper[:, 0])
+    if interpret is None:
+        interpret = default_interpret()
+    return _rs.range_scan_visit(
+        data_cm, block_ids, lower, upper, tile_n=tile_n, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def range_scan_vertical(
+    data_cm: jax.Array,
+    dim_ids: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    tile_n: int = _rs.DEFAULT_TILE_N,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Partial-match scan touching only queried dims -> (n_pad,) int8."""
+    if use_xla():
+        rows = data_cm[dim_ids]  # touch only the queried dimensions' columns
+        return _ref.range_scan_ref(rows, lower[dim_ids, 0], upper[dim_ids, 0])
+    if interpret is None:
+        interpret = default_interpret()
+    return _rs.range_scan_vertical(
+        data_cm, dim_ids, lower, upper, tile_n=tile_n, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))
+def range_scan_rows(
+    data_rm: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    tile_rows: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Row-major (horizontal layout) scan -> (n_pad,) int8."""
+    if use_xla():
+        ok = jnp.logical_and(data_rm >= lower, data_rm <= upper)
+        return jnp.all(ok, axis=1).astype(jnp.int8)
+    if interpret is None:
+        interpret = default_interpret()
+    return _rs.range_scan_rows(
+        data_rm, lower, upper, tile_rows=tile_rows, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tile_n", "interpret"))
+def va_filter(
+    packed: jax.Array,
+    cell_lo: jax.Array,
+    cell_hi: jax.Array,
+    m: int,
+    *,
+    tile_n: int = _va.DEFAULT_TILE_N,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed VA-file approximation filter -> (n_pad,) int8 candidate mask."""
+    if use_xla():
+        return _ref.va_filter_packed_ref(packed, cell_lo[:, 0], cell_hi[:, 0], m)
+    if interpret is None:
+        interpret = default_interpret()
+    return _va.va_filter_packed(
+        packed, cell_lo, cell_hi, m, tile_n=tile_n, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_visit_attention(
+    q: jax.Array,
+    k_blocks: jax.Array,
+    v_blocks: jax.Array,
+    block_ids: jax.Array,
+    pos: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Block-visit decode attention (zone-map-pruned KV) -> (B, KV, G, hd)."""
+    from repro.kernels import kv_visit as _kvv
+    if use_xla():
+        return _ref.kv_visit_attention_ref(q, k_blocks, v_blocks, block_ids, pos)
+    if interpret is None:
+        interpret = default_interpret()
+    return _kvv.kv_visit_attention(q, k_blocks, v_blocks, block_ids, pos,
+                                   interpret=interpret)

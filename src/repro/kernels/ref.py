@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for the MDRQ Pallas kernels.
+
+Each function is the semantic ground truth the kernels are validated against
+(tests sweep shapes and dtypes with ``assert_allclose`` / exact equality — the
+outputs are discrete masks, so equality is exact).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def range_scan_ref(data_cm: jax.Array, lower: jax.Array, upper: jax.Array) -> jax.Array:
+    """Oracle for the columnar range-scan kernel.
+
+    Args:
+      data_cm: (m, n) columnar data, any float dtype.
+      lower, upper: (m,) or (m, 1) query bounds (same dtype as data after cast).
+
+    Returns:
+      (n,) int8 mask — 1 where ``all_j lower_j <= x_ji <= upper_j``.
+    """
+    lo = lower.reshape(-1, 1).astype(data_cm.dtype)
+    up = upper.reshape(-1, 1).astype(data_cm.dtype)
+    ok = jnp.logical_and(data_cm >= lo, data_cm <= up)
+    return jnp.all(ok, axis=0).astype(jnp.int8)
+
+
+def range_scan_blocks_ref(
+    data_blocks: jax.Array, block_ids: jax.Array, lower: jax.Array, upper: jax.Array
+) -> jax.Array:
+    """Oracle for the block-visit range scan (two-phase tree/VA refinement).
+
+    Args:
+      data_blocks: (n_blocks, m, tn) columnar leaf blocks.
+      block_ids: (n_visit,) int32 ids of blocks to scan (may repeat; negative
+        ids are treated as padding and clamped to 0 — callers drop those rows).
+      lower, upper: (m,) bounds.
+
+    Returns:
+      (n_visit, tn) int8 per-visit masks.
+    """
+    ids = jnp.maximum(block_ids, 0)
+    blocks = data_blocks[ids]  # (v, m, tn)
+    lo = lower.reshape(1, -1, 1).astype(data_blocks.dtype)
+    up = upper.reshape(1, -1, 1).astype(data_blocks.dtype)
+    ok = jnp.logical_and(blocks >= lo, blocks <= up)
+    return jnp.all(ok, axis=1).astype(jnp.int8)
+
+
+def kv_visit_attention_ref(
+    q: jax.Array, k_blocks: jax.Array, v_blocks: jax.Array,
+    block_ids: jax.Array, pos: jax.Array,
+) -> jax.Array:
+    """Oracle for the block-visit decode attention kernel.
+
+    q: (B, KV, G, hd); k/v_blocks: (B, KV, nb, bs, hd);
+    block_ids: (B, KV, n_visit) (-1 = padding); pos: (B,).
+    Returns (B, KV, G, hd).
+    """
+    b, kv, g, hd = q.shape
+    nb, bs = k_blocks.shape[2], k_blocks.shape[3]
+    ids = jnp.maximum(block_ids, 0)
+    k_sel = jnp.take_along_axis(k_blocks, ids[..., None, None], axis=2)
+    v_sel = jnp.take_along_axis(v_blocks, ids[..., None, None], axis=2)
+    slots = ids[..., None] * bs + jnp.arange(bs)[None, None, None, :]
+    valid = (slots <= pos[:, None, None, None]) & (block_ids[..., None] >= 0)
+    s = jnp.einsum("bkgh,bkjth->bkgjt", q.astype(jnp.float32),
+                   k_sel.astype(jnp.float32)) * (hd ** -0.5)
+    s = jnp.where(valid[:, :, None, :, :], s, -2.3819763e38)
+    nv = block_ids.shape[-1]
+    s = s.reshape(b, kv, g, nv * bs)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,bkth->bkgh", w,
+                     v_sel.astype(jnp.float32).reshape(b, kv, nv * bs, hd))
+    return out.astype(q.dtype)
+
+
+def va_filter_ref(codes: jax.Array, cell_lo: jax.Array, cell_hi: jax.Array) -> jax.Array:
+    """Oracle for the VA-file approximation filter on *unpacked* codes.
+
+    Args:
+      codes: (m, n) integer cell codes in [0, 3] (2 bits/dim, paper §2.2.3).
+      cell_lo, cell_hi: (m,) int32 query cell bounds per dimension.
+
+    Returns:
+      (n,) int8 candidate mask — 1 where every dim's code intersects the query.
+    """
+    lo = cell_lo.reshape(-1, 1).astype(codes.dtype)
+    hi = cell_hi.reshape(-1, 1).astype(codes.dtype)
+    ok = jnp.logical_and(codes >= lo, codes <= hi)
+    return jnp.all(ok, axis=0).astype(jnp.int8)
+
+
+def va_filter_packed_ref(
+    packed: jax.Array, cell_lo: jax.Array, cell_hi: jax.Array, m: int
+) -> jax.Array:
+    """Oracle for the packed VA filter: unpack 16 2-bit fields per int32 word.
+
+    Args:
+      packed: (w, n) int32, word w holds dims [16w, 16w+16) in 2-bit fields.
+      cell_lo, cell_hi: (m,) int32 query cell bounds.
+      m: true number of dimensions (w = ceil(m / 16)).
+    """
+    w, n = packed.shape
+    acc = jnp.ones((n,), dtype=jnp.bool_)
+    for wi in range(w):
+        word = packed[wi]
+        for k in range(16):
+            d = wi * 16 + k
+            if d >= m:
+                break
+            field = jnp.bitwise_and(jnp.right_shift(word, 2 * k), 3)
+            acc = jnp.logical_and(
+                acc, jnp.logical_and(field >= cell_lo[d], field <= cell_hi[d])
+            )
+    return acc.astype(jnp.int8)

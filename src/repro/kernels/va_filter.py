@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: VA-file approximation filter on packed 2-bit codes.
+
+The paper's VA-file (§2.2.3, §5.3) quantizes every dimension to 2 bits and
+scans the *approximations* first; only buckets whose approximation intersects
+the approximated query are refined against the exact data. On TPU this is the
+most natural of the three MDIS: the approximation scan is a branch-free packed
+integer compare that is 16x denser than the float scan (16 dims per int32
+word), converting the first phase from HBM-bandwidth-bound to nearly free.
+
+Packing: word ``w`` of object ``i`` holds dims ``[16w, 16w+16)`` — dim
+``16w + k`` occupies bits ``[2k, 2k+2)``. The kernel unpacks with static
+shift/mask ops (VPU int32 lanes) and AND-reduces across dims in registers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_TILE_N = 2048
+DIMS_PER_WORD = 16
+
+
+def pack_codes(codes: np.ndarray) -> np.ndarray:
+    """Pack (m, n) uint8 codes in [0,3] into (ceil(m/16), n) int32 words."""
+    m, n = codes.shape
+    w = -(-m // DIMS_PER_WORD)
+    out = np.zeros((w, n), dtype=np.int32)
+    for d in range(m):
+        wi, k = divmod(d, DIMS_PER_WORD)
+        out[wi] |= codes[d].astype(np.int32) << (2 * k)
+    return out
+
+
+def _va_kernel(qlo_ref, qhi_ref, packed_ref, out_ref, *, m: int):
+    words = packed_ref[...]  # (w, tn) int32
+    w = words.shape[0]
+    acc = None
+    for wi in range(w):
+        word = words[wi]
+        for k in range(DIMS_PER_WORD):
+            d = wi * DIMS_PER_WORD + k
+            if d >= m:
+                break
+            field = jnp.bitwise_and(jnp.right_shift(word, 2 * k), 3)
+            ok = jnp.logical_and(field >= qlo_ref[d, 0], field <= qhi_ref[d, 0])
+            acc = ok if acc is None else jnp.logical_and(acc, ok)
+    out_ref[...] = acc[None, :].astype(jnp.int8)
+
+
+def va_filter_packed(
+    packed: jax.Array,
+    cell_lo: jax.Array,
+    cell_hi: jax.Array,
+    m: int,
+    *,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> jax.Array:
+    """Candidate mask from packed approximations.
+
+    Args:
+      packed: (w, n_pad) int32 packed codes, n_pad % tile_n == 0.
+      cell_lo, cell_hi: (m_s, 1) int32 query cell bounds, m_s >= m (padded rows
+        carry [0, 3] match-all bounds and are skipped by the static loop bound).
+      m: true dimensionality.
+
+    Returns:
+      (n_pad,) int8 candidate mask.
+    """
+    w, n_pad = packed.shape
+    assert n_pad % tile_n == 0 and tile_n % LANES == 0
+    m_s = cell_lo.shape[0]
+    assert m_s >= m and cell_lo.shape == cell_hi.shape == (m_s, 1)
+
+    import functools
+
+    grid = (n_pad // tile_n,)
+    out = pl.pallas_call(
+        functools.partial(_va_kernel, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_s, 1), lambda i: (0, 0)),
+            pl.BlockSpec((m_s, 1), lambda i: (0, 0)),
+            pl.BlockSpec((w, tile_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), jnp.int8),
+        interpret=interpret,
+    )(cell_lo.astype(jnp.int32), cell_hi.astype(jnp.int32), packed)
+    return out[0]

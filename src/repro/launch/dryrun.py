@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract memory/cost/collective analysis.
+
+MUST be the process entrypoint (the XLA_FLAGS line above runs before any jax
+import — jax locks the device count on first init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm_360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod 16x16
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh, data_axis_size
+from repro.models import shardctx
+from repro.models.registry import (batch_axes, build_model, make_cell,
+                                   shape_applicable, sharding_rules)
+from repro.models.params import sharding_tree
+from repro.serve.serve_step import make_serve_step
+from repro.train.optimizer import OptConfig, init_opt_state, opt_state_pspecs
+from repro.train.train_step import make_train_step
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             rules_override=None, verbose: bool = True, cfg_override=None,
+             tag: str = "") -> dict:
+    """Lower+compile one cell; returns the result record.
+
+    Three compiles per cell (§Roofline methodology):
+      1. FULL model, scanned layers  -> sharding validation + memory_analysis
+         (the production graph; compiles fast because HLO is compact);
+      2. 1-unit model, unrolled      -> cost_analysis + collective bytes;
+      3. 2-unit model, unrolled      -> ditto.
+    Costs are exactly linear in the layer count for homogeneous stacks, so
+      cost(L) = cost(1) + (L-1) * (cost(2) - cost(1)).
+    This sidesteps two XLA facts measured on this backend: (a) cost analysis
+    counts a while-loop body ONCE, so the scanned graph under-reports by ~L x;
+    (b) fully unrolled compiles take minutes per cell on one CPU core.
+    A full-unroll spot check validates the extrapolation (see EXPERIMENTS.md).
+    """
+    from benchmarks import roofline as RL
+
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "tag": tag,
+           "ts": time.time()}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return _save(rec, out_dir)
+
+    seq, batch, kind = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_override or sharding_rules(cfg)
+
+    # ---- compile 1: full model, scanned (sharding validation + memory) -----
+    full_cfg = cfg.replace(scan_layers=True)
+    lowered, t_lower = _lower_for(full_cfg, arch, shape, kind, mesh,
+                                  multi_pod, rules)
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                mem[attr] = int(v)
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+
+    # ---- compiles 2+3: 1-unit / 2-unit unrolled (cost extraction) ----------
+    units, cfg1, cfg2 = _unit_configs(cfg)
+    rls = []
+    for c in (cfg1, cfg2):
+        lw, _ = _lower_for(c, arch, shape, kind, mesh, multi_pod,
+                           rules_override or sharding_rules(c))
+        cp = lw.compile()
+        rls.append(RL.from_compiled(cp, cp.as_text()))
+    rl = RL.extrapolate(rls[0], rls[1], units)
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    tokens = batch * (seq if kind in ("train", "prefill") else 1)
+    mf = RL.model_flops(cfg, tokens, train=(kind == "train"))
+
+    counts = cfg.param_counts()
+    rec.update(
+        status="ok", kind=kind, chips=n_chips,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        tokens_per_step=tokens,
+        params_total=counts["total"], params_active=counts["active"],
+        model_flops=mf,
+        model_flops_per_device=mf / n_chips,
+        useful_flops_ratio=(mf / n_chips) / rl.flops_per_device
+        if rl.flops_per_device else None,
+        memory_analysis=mem,
+        cost_method=f"L1/L2 extrapolation, units={units}",
+        **rl.summary(),
+    )
+    if verbose:
+        print(f"[{arch} x {shape} x {mesh_name}] kind={kind} "
+              f"compile={t_compile:.1f}s flops/dev={rl.flops_per_device:.3e} "
+              f"useful={rec['useful_flops_ratio'] or 0:.2f} "
+              f"dominant={rl.dominant} "
+              f"(c={rl.compute_s*1e3:.2f}ms m={rl.memory_s*1e3:.2f}ms "
+              f"coll={rl.collective_s*1e3:.2f}ms)", flush=True)
+    return _save(rec, out_dir)
+
+
+def _unit_configs(cfg):
+    """(units, 1-unit cfg, 2-unit cfg) for the linear cost extrapolation."""
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // 3
+        tail = cfg.n_layers - 3 * n_groups
+        return (n_groups,
+                cfg.replace(n_layers=3 + tail, scan_layers=False),
+                cfg.replace(n_layers=6 + tail, scan_layers=False))
+    if cfg.encoder_layers:
+        return (cfg.n_layers,
+                cfg.replace(n_layers=1, encoder_layers=1, scan_layers=False),
+                cfg.replace(n_layers=2, encoder_layers=2, scan_layers=False))
+    return (cfg.n_layers,
+            cfg.replace(n_layers=1, scan_layers=False),
+            cfg.replace(n_layers=2, scan_layers=False))
+
+
+def _lower_for(cfg, arch, shape, kind, mesh, multi_pod, rules):
+    """Build + lower the cell function for one config variant."""
+    shardctx.set_ctx(mesh, batch_axes(multi_pod))
+    model = build_model(cfg)
+    cell = make_cell(arch, shape, multi_pod=multi_pod, cfg=cfg)
+    params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    param_sh = sharding_tree(params_abs, mesh, rules)
+
+    t0 = time.perf_counter()
+    if kind == "train":
+        opt_abs = jax.eval_shape(init_opt_state, params_abs)
+        opt_sh = _named(mesh, opt_state_pspecs(
+            params_abs, rules, data_axes=("data",),
+            data_size=mesh.shape["data"]))
+        batch_sh = _named(mesh, cell.input_pspecs)
+        step = make_train_step(model, OptConfig(), grad_accum=cfg.grad_accum)
+        jitted = jax.jit(step,
+                         in_shardings=(param_sh, opt_sh, batch_sh),
+                         out_shardings=(param_sh, opt_sh, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_abs, opt_abs, cell.inputs)
+    elif kind == "prefill":
+        batch_sh = _named(mesh, cell.input_pspecs)
+        fn = jax.jit(model.prefill, in_shardings=(param_sh, batch_sh))
+        lowered = fn.lower(params_abs, cell.inputs)
+    else:  # decode
+        cache_sh = _named(mesh, cell.cache_pspecs)
+        tok_sh = _named(mesh, cell.input_pspecs)
+        fn = jax.jit(make_serve_step(model),
+                     in_shardings=(param_sh, cache_sh,
+                                   tok_sh["tokens"], tok_sh["pos"]),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(1,))
+        lowered = fn.lower(params_abs, cell.cache_specs,
+                           cell.inputs["tokens"], cell.inputs["pos"])
+    return lowered, time.perf_counter() - t0
+
+
+def _save(rec: dict, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{rec.get('tag','')}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in cells:
+        try:
+            run_cell(a, s, mp, args.out)
+        except Exception:
+            failures += 1
+            print(f"FAILED [{a} x {s} x {'2x16x16' if mp else '16x16'}]",
+                  flush=True)
+            traceback.print_exc()
+    print(f"dry-run complete: {len(cells) - failures}/{len(cells)} cells ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,87 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: re-lower the three chosen cells with optimization
+variants and record roofline deltas next to the paper-faithful baselines.
+
+Cells (EXPERIMENTS.md §Perf):
+  * smollm_360m  x train_4k    — worst useful-flops ratio (policy-C attention)
+  * qwen3_8b     x prefill_32k — most collective-bound
+  * arctic_480b  x decode_32k  — most paper-representative (KV streaming =
+    the paper's scan; zone-map block pruning = its MBR prune on key blocks)
+
+Usage: PYTHONPATH=src:. python -m repro.launch.perf [--cell smollm] [--multi-pod]
+"""
+import argparse
+import sys
+import traceback
+
+from repro.configs import get_config
+from repro.launch.dryrun import RESULTS_DIR, run_cell
+
+VARIANTS = {
+    "smollm_360m/train_4k": [
+        ("__opt1_attn2d", dict(attn_batch_shard=True)),
+        ("__opt2_seqshard", dict(seq_shard_resid=True)),
+        ("__opt3_bf16scr", dict(seq_shard_resid=True, attn_scores_f32=False)),
+        ("__opt4_qchunk4k", dict(seq_shard_resid=True, attn_scores_f32=False,
+                                 q_chunk=4096)),
+    ],
+    "qwen3_8b/prefill_32k": [
+        ("__opt1_lastonly", dict(prefill_last_only=True)),
+        ("__opt2_seqshard", dict(prefill_last_only=True,
+                                 seq_shard_resid=True)),
+        ("__opt3_bf16scr", dict(prefill_last_only=True,
+                                seq_shard_resid=True,
+                                attn_scores_f32=False)),
+    ],
+    # generalization of the cell-1 winner to the other policy-C train cells
+    "llava_next_34b/train_4k": [
+        ("__opt_seqshard", dict(seq_shard_resid=True)),
+    ],
+    "phi3_medium_14b/train_4k": [
+        ("__opt_seqshard", dict(seq_shard_resid=True)),
+    ],
+    "arctic_480b/train_4k": [
+        ("__opt_seqshard", dict(seq_shard_resid=True)),
+    ],
+    "arctic_480b/decode_32k": [
+        ("__opt1_int8kv", dict(kv_cache_int8=True)),
+        ("__opt2_prune16", dict(kv_cache_int8=True, kv_block_prune=16,
+                                kv_block_size=512)),
+        ("__opt3_prune8", dict(kv_cache_int8=True, kv_block_prune=8,
+                               kv_block_size=512)),
+        ("__opt4_pruneloc", dict(kv_cache_int8=True, kv_block_prune=16,
+                                 kv_block_size=512, kv_prune_groups=16)),
+        ("__opt5_p_noq8", dict(kv_block_prune=16, kv_block_size=512,
+                               kv_prune_groups=16)),
+    ],
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="", help="substring filter")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    failures = 0
+    for cell, variants in VARIANTS.items():
+        if args.cell and args.cell not in cell:
+            continue
+        arch, shape = cell.split("/")
+        for tag, overrides in variants:
+            cfg = get_config(arch).replace(**overrides)
+            try:
+                run_cell(arch, shape, args.multi_pod, args.out,
+                         cfg_override=cfg, tag=tag)
+            except Exception:
+                failures += 1
+                print(f"FAILED [{cell} {tag}]", flush=True)
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

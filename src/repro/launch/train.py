@@ -1,0 +1,67 @@
+"""Production training entrypoint.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm_360m \\
+      --steps 100 --batch 8 --seq 128 --reduced --ckpt-dir /tmp/ckpt
+
+On a real pod this runs under the production mesh (--mesh single|multi) with
+the per-arch sharding policy; on this CPU box use --reduced for a smoke-scale
+run on one device. Resume is automatic from --ckpt-dir.
+"""
+import argparse
+import sys
+
+import jax
+
+from repro.configs import get_config
+from repro.data import DataConfig, FilteredTokenPipeline
+from repro.models.registry import build_model
+from repro.train import OptConfig, Trainer, TrainerConfig
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    pipe = FilteredTokenPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, n_pool=16384, seed=args.seed))
+    print(f"[train] arch={cfg.name} devices={len(jax.devices())} "
+          f"admitted={pipe.admitted.size} samples via "
+          f"{pipe.filter_stats.method}", flush=True)
+
+    tr = Trainer(model, pipe,
+                 OptConfig(peak_lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                           decay_steps=args.steps),
+                 args.ckpt_dir,
+                 TrainerConfig(num_steps=args.steps,
+                               ckpt_every=args.ckpt_every,
+                               log_every=max(1, args.steps // 20)),
+                 grad_accum=args.grad_accum)
+    if tr.try_resume():
+        print(f"[train] resumed at step {tr.step}", flush=True)
+    else:
+        tr.init_state()
+    log = tr.run()
+    for r in log:
+        print(f"[train] step={r['step']} loss={r['loss']:.4f} "
+              f"gnorm={r['grad_norm']:.3f} {r['sec']:.2f}s", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

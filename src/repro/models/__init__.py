@@ -1,0 +1,2 @@
+"""repro.models — layer library and the 10 assigned architectures."""
+from repro.models.registry import build_model, attn_policy, sharding_rules, make_cell

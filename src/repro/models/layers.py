@@ -1,0 +1,450 @@
+"""Shared layer library: RMSNorm, RoPE, GQA attention (train/decode, SWA,
+qk-norm, cross), SwiGLU MLP, embedding/unembed.
+
+Conventions:
+  * params are ``Param(value, logical_axes)`` trees (see params.py);
+  * weights/activations in cfg dtype (bf16), norm scales and softmax/norm
+    internals in f32 (mixed precision);
+  * long-sequence attention is query-chunked (lax.scan over query blocks) so
+    the (S, T) score tensor never materializes at 32k+ — the XLA-level
+    equivalent of flash attention's streaming softmax, adequate for dry-run
+    roofline math and CPU execution alike;
+  * decode caches: full (B, S_max, KV, hd) or ring buffers of ``window`` slots
+    for SWA/local attention (RoPE is applied at write time with absolute
+    positions, so reads need no re-rotation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import Param, dense_init, ones_init
+from repro.models import shardctx
+
+F32 = jnp.float32
+NEG = -2.3819763e38  # large negative for masks (finite in bf16 after cast)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rmsnorm_init(d: int) -> Param:
+    return ones_init((d,), ("embed",), F32)
+
+
+def rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def headwise_rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Qwen3-style per-head RMS norm over head_dim; x: (..., hd)."""
+    xf = x.astype(F32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding; x: (B, S, H, hd), positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = (theta ** (-jnp.arange(0, half, dtype=F32) / half))
+    ang = positions[..., None].astype(F32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def attention_init(key, cfg, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), ("embed", "heads", "head_dim"), dt),
+        "wk": dense_init(ks[1], (d, kv, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": dense_init(ks[2], (d, kv, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": dense_init(ks[3], (h, hd, d), ("heads", "head_dim", "embed"), dt,
+                         scale=(h * hd) ** -0.5),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = ones_init((hd,), ("head_dim",), F32)
+        p["k_norm"] = ones_init((hd,), ("head_dim",), F32)
+    return p
+
+
+def _qkv(p, x, positions, cfg, *, rope_qk: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].value)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].value)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].value)
+    if cfg.qk_norm and "q_norm" in p:
+        q = headwise_rmsnorm(p["q_norm"].value, q, cfg.norm_eps)
+        k = headwise_rmsnorm(p["k_norm"].value, k, cfg.norm_eps)
+    if rope_qk:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_kv: int, scores_f32: bool = True):
+    """Grouped scaled-dot-product attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd); mask: (B|1, Sq, Skv) bool.
+    scores_f32=False keeps the score tensor in bf16 with an f32 running max /
+    denominator (flash-style numerics at XLA level) — §Perf memory lever.
+    """
+    b, sq, h, hd = q.shape
+    g = h // n_kv
+    qg = q.reshape(b, sq, n_kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k)
+    scale = jnp.asarray(hd ** -0.5, scores.dtype)
+    if scores_f32:
+        scores = scores.astype(F32) * scale
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    else:
+        scores = scores * scale
+        neg = jnp.asarray(-3e38, scores.dtype)
+        scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+        m = jnp.max(scores.astype(F32), axis=-1, keepdims=True)
+        e = jnp.exp((scores.astype(F32) - m)).astype(q.dtype)
+        denom = jnp.sum(e.astype(F32), axis=-1, keepdims=True)
+        w = (e / jnp.maximum(denom, 1e-30).astype(q.dtype))
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _train_mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(B, Sq, Skv) mask from absolute positions."""
+    d = q_pos[:, :, None] - k_pos[:, None, :]
+    m = jnp.ones(d.shape, bool)
+    if causal:
+        m &= d >= 0
+    if window is not None:
+        m &= d < window
+    return m
+
+
+def mha_train(
+    p, x, positions, cfg, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: Optional[int] = None,
+) -> jax.Array:
+    """Full-sequence self-attention; query-chunked when S > q_chunk.
+
+    cfg.attn_batch_shard (§Perf, policy-C archs): reshard the batch over
+    (data..., model) around the attention so replicated-head compute splits
+    over the full mesh instead of the data axis only.
+    """
+    q_chunk = q_chunk or cfg.q_chunk
+    bm = shardctx.batch_model_axes()
+    shard2d = (cfg.attn_batch_shard and bm is not None
+               and x.shape[0] % __import__("math").prod(
+                   shardctx.mesh().shape[a] for a in bm) == 0)
+    if shard2d:
+        from jax.sharding import PartitionSpec as P
+        x = shardctx.constrain(x, P(bm, None, None))
+        positions = shardctx.constrain(positions, P(bm, None))
+    q, k, v = _qkv(p, x, positions, cfg)
+    b, s = x.shape[:2]
+    if s <= q_chunk:
+        mask = _train_mask(positions, positions, causal, window)
+        out = _sdpa(q, k, v, mask, cfg.n_kv_heads, cfg.attn_scores_f32)
+    else:
+        assert s % q_chunk == 0, (s, q_chunk)
+        nc = s // q_chunk
+        qc = q.reshape(b, nc, q_chunk, *q.shape[2:]).transpose(1, 0, 2, 3, 4)
+        pc = positions.reshape(b, nc, q_chunk).transpose(1, 0, 2)
+
+        def step(_, inp):
+            qi, pi = inp
+            mask = _train_mask(pi, positions, causal, window)
+            return None, _sdpa(qi, k, v, mask, cfg.n_kv_heads,
+                               cfg.attn_scores_f32)
+
+        _, outs = jax.lax.scan(step, None, (qc, pc))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, *q.shape[2:])
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].value)
+    if shard2d:
+        from jax.sharding import PartitionSpec as P
+        y = shardctx.constrain(y, P(shardctx.batch_axes(), None, None))
+    return y
+
+
+# -- decode -----------------------------------------------------------------
+@dataclasses.dataclass
+class KVCache:
+    """Per-layer-stacked KV cache. ``window`` => ring buffer semantics."""
+    k: jax.Array  # (L, B, S_slots, KV, hd)
+    v: jax.Array
+    window: Optional[int] = None
+
+
+def _ring_slot(pos: jax.Array, window: int) -> jax.Array:
+    return jnp.mod(pos, window)
+
+
+def decode_key_positions(pos: jax.Array, n_slots: int, window: Optional[int]):
+    """Absolute position held by each cache slot at decode step ``pos``.
+
+    pos: (B,) int32 — position of the token being decoded (0-based); slots
+    holding nothing yet get position -1 (masked).
+    Full cache: slot s holds position s if s <= pos.
+    Ring cache: slot s holds the latest position p <= pos with p % window == s.
+    """
+    slots = jnp.arange(n_slots)[None, :]  # (1, S)
+    if window is None:
+        kpos = jnp.where(slots <= pos[:, None], slots, -1)
+    else:
+        w = jnp.mod(pos[:, None], window)
+        kpos = pos[:, None] - jnp.mod(w - slots, window)
+        kpos = jnp.where(kpos < 0, -1, kpos)
+    return kpos  # (B, S_slots)
+
+
+def quantize_kv(x: jax.Array):
+    """(B, 1, KV, hd) -> (int8 codes, per-(token, head) f32 scale)."""
+    amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(F32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _sdpa_pruned(q, k_sel, v_sel, mask_sel, n_kv: int, scores_f32: bool):
+    """Decode attention over per-kv-head selected keys.
+
+    q: (B, 1, H, hd); k_sel/v_sel: (B, KV, T', hd); mask_sel: (B, KV, T').
+    """
+    b, sq, h, hd = q.shape
+    g = h // n_kv
+    qg = q.reshape(b, sq, n_kv, g, hd)
+    scores = jnp.einsum("bskgh,bkth->bkgst", qg, k_sel).astype(F32)
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(mask_sel[:, :, None, None, :], scores, NEG)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,bkth->bskgh", w, v_sel)
+    return out.reshape(b, sq, h, hd)
+
+
+def mha_decode(
+    p, x1, pos, k_cache, v_cache, cfg, *, window: Optional[int] = None,
+    extras: Optional[dict] = None,
+):
+    """Single-token decode with cache update.
+
+    x1: (B, 1, D); pos: (B,) absolute positions; k_cache/v_cache:
+    (B, S_slots, KV, hd) — int8 when cfg.kv_cache_int8 (then ``extras`` holds
+    per-token scales). cfg.kv_block_prune > 0 enables zone-map block pruning
+    (§Perf / DESIGN.md: the paper's R-tree MBR prune applied to key blocks —
+    per-block min/max key coordinates bound the q.k score; only the
+    top-``kv_block_prune`` blocks are read).
+
+    Returns (y1, k_cache', v_cache', extras').
+    """
+    q, k, v = _qkv(p, x1, pos[:, None], cfg)
+    n_slots = k_cache.shape[1]
+    slot = pos if window is None else _ring_slot(pos, window)
+    extras = dict(extras or {})
+
+    def upd(cache, new, trailing=2):
+        def one(c, n, s):
+            return jax.lax.dynamic_update_slice(
+                c, n.astype(c.dtype), (s,) + (0,) * trailing)
+        return jax.vmap(one)(cache, new, slot)
+
+    if cfg.kv_cache_int8:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        k_cache = upd(k_cache, kq)
+        v_cache = upd(v_cache, vq)
+        extras["k_scale"] = upd(extras["k_scale"], ks)
+        extras["v_scale"] = upd(extras["v_scale"], vs)
+    else:
+        k_cache = upd(k_cache, k)
+        v_cache = upd(v_cache, v)
+
+    if cfg.kv_block_prune:
+        assert window is None, "block pruning targets full caches"
+        bs = cfg.kv_block_size
+        nb = n_slots // bs
+        bidx = slot // bs
+        # zone maps: running per-block min/max of (rope'd) keys
+        def zupd(z, new, op):
+            def one(zc, n, bi):
+                cur = jax.lax.dynamic_slice(zc, (bi, 0, 0), (1,) + zc.shape[1:])
+                return jax.lax.dynamic_update_slice(
+                    zc, op(cur, n.astype(zc.dtype)), (bi, 0, 0))
+            return jax.vmap(one)(z, new, bidx)
+
+        extras["kmin"] = zupd(extras["kmin"], k, jnp.minimum)
+        extras["kmax"] = zupd(extras["kmax"], k, jnp.maximum)
+
+    kpos = decode_key_positions(pos, n_slots, window)
+    mask = (kpos >= 0) & (kpos <= pos[:, None])  # (B, S_slots)
+
+    if cfg.kv_block_prune:
+        keep = min(cfg.kv_block_prune, nb)
+        # score upper bound per (q head, block): sum_d max(q_d*min_d, q_d*max_d)
+        qh = q[:, 0].astype(F32)                                  # (B, H, hd)
+        g = cfg.n_heads // cfg.n_kv_heads
+        qg = qh.reshape(qh.shape[0], cfg.n_kv_heads, g, qh.shape[-1])
+        kmin = extras["kmin"].astype(F32)                         # (B, nb, KV, hd)
+        kmax = extras["kmax"].astype(F32)
+        # sum_d max(q_d*kmin_d, q_d*kmax_d) = q+.kmax + q-.kmin  (exact bound)
+        qpos = jnp.maximum(qg, 0.0)
+        qneg = jnp.minimum(qg, 0.0)
+        ub = (jnp.einsum("bkgh,bnkh->bkgn", qpos, kmax)
+              + jnp.einsum("bkgh,bnkh->bkgn", qneg, kmin)).max(axis=2)  # (B,KV,nb)
+        # blocks with no valid key yet are never selected
+        blk_valid = mask.reshape(mask.shape[0], nb, bs).any(-1)   # (B, nb)
+        ub = jnp.where(blk_valid[:, None, :], ub, -jnp.inf)
+        # always keep the block being written (recency)
+        cur = jax.nn.one_hot(bidx, nb, dtype=jnp.bool_)[:, None, :]
+        ub = jnp.where(cur, jnp.inf, ub)
+        if cfg.kv_prune_groups:
+            # shard-local selection: top-(keep/G) inside each contiguous block
+            # group; groups align with the model-axis slot shards, so the
+            # block gather never crosses devices (§Perf arctic iteration 3)
+            G = cfg.kv_prune_groups
+            assert nb % G == 0, f"blocks {nb} must divide into {G} groups"
+            nbg = nb // G
+            kg = max(1, keep // G)
+            ubg = ub.reshape(ub.shape[0], ub.shape[1], G, nbg)
+            _, topg = jax.lax.top_k(ubg, kg)                      # (B,KV,G,kg)
+            offs = (jnp.arange(G) * nbg)[None, None, :, None]
+            top = (topg + offs).reshape(ub.shape[0], ub.shape[1], G * kg)
+            keep = G * kg
+        else:
+            _, top = jax.lax.top_k(ub, keep)                      # (B, KV, keep)
+
+        def gather_blocks(cache):
+            b = cache.shape[0]
+            cb = cache.reshape(b, nb, bs, cache.shape[2], cache.shape[3])
+            cb = cb.transpose(0, 3, 1, 2, 4)                      # (B,KV,nb,bs,hd)
+            sel = jnp.take_along_axis(cb, top[:, :, :, None, None], axis=2)
+            return sel.reshape(b, cache.shape[2], keep * bs, cache.shape[3])
+
+        k_sel = gather_blocks(k_cache)
+        v_sel = gather_blocks(v_cache)
+        if cfg.kv_cache_int8:
+            ks_sel = gather_blocks(extras["k_scale"])
+            vs_sel = gather_blocks(extras["v_scale"])
+            k_sel = k_sel.astype(x1.dtype) * ks_sel.astype(x1.dtype)
+            v_sel = v_sel.astype(x1.dtype) * vs_sel.astype(x1.dtype)
+        mb = mask.reshape(mask.shape[0], nb, bs)                  # (B, nb, bs)
+        mask_sel = jnp.take_along_axis(
+            jnp.broadcast_to(mb[:, None], (mb.shape[0], cfg.n_kv_heads, nb, bs)),
+            top[:, :, :, None], axis=2).reshape(mask.shape[0], cfg.n_kv_heads,
+                                                keep * bs)
+        out = _sdpa_pruned(q, k_sel.astype(x1.dtype), v_sel.astype(x1.dtype),
+                           mask_sel, cfg.n_kv_heads, cfg.attn_scores_f32)
+    else:
+        if cfg.kv_cache_int8:
+            kf = k_cache.astype(x1.dtype) * extras["k_scale"].astype(x1.dtype)
+            vf = v_cache.astype(x1.dtype) * extras["v_scale"].astype(x1.dtype)
+        else:
+            kf, vf = k_cache, v_cache
+        out = _sdpa(q, kf, vf, mask[:, None, :], cfg.n_kv_heads,
+                    cfg.attn_scores_f32)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].value)
+    return y, k_cache, v_cache, extras
+
+
+# -- cross-attention (encoder-decoder) ---------------------------------------
+def cross_kv(p, enc_out):
+    """Precompute cross K/V from encoder output (cached for decode)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].value)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].value)
+    return k, v
+
+
+def cross_attend(p, x, k, v, cfg, enc_mask=None):
+    """Cross-attention: no RoPE, no causality; enc_mask: (B, S_enc) or None."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].value)
+    b, sq = x.shape[:2]
+    skv = k.shape[1]
+    mask = jnp.ones((b, sq, skv), bool) if enc_mask is None else \
+        jnp.broadcast_to(enc_mask[:, None, :], (b, sq, skv))
+    out = _sdpa(q, k, v, mask, cfg.n_kv_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].value)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+def mlp_init(key, cfg, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(ks[0], (d, f), ("embed", "ff"), dt),
+        "wi_up": dense_init(ks[1], (d, f), ("embed", "ff"), dt),
+        "wo": dense_init(ks[2], (f, d), ("ff", "embed"), dt),
+    }
+
+
+def mlp(p, x):
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wi_gate"].value))
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].value)
+    return jnp.einsum("bsf,fd->bsd", g * u, p["wo"].value)
+
+
+# --------------------------------------------------------------------------
+# embedding / unembed
+# --------------------------------------------------------------------------
+def round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def embedding_init(key, cfg, vocab_pad: int) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    # Gemma-style scaling: table std d^-1/2 (keeps tied-unembed logits O(1)),
+    # embedding output multiplied by sqrt(d) to restore unit activation scale.
+    p = {"table": dense_init(key, (vocab_pad, cfg.d_model), ("vocab", "embed"),
+                             dt, scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(
+            jax.random.fold_in(key, 1), (cfg.d_model, vocab_pad),
+            ("embed", "vocab"), dt)
+    return p
+
+
+def embed(p, tokens):
+    x = jnp.take(p["table"].value, tokens, axis=0)
+    return x * jnp.asarray(x.shape[-1] ** 0.5, x.dtype)
+
+
+def unembed(p, x, tie: bool) -> jax.Array:
+    if tie:
+        return jnp.einsum("bsd,vd->bsv", x, p["table"].value).astype(F32)
+    return jnp.einsum("bsd,dv->bsv", x, p["unembed"].value).astype(F32)
+
+
+def xent_loss(logits: jax.Array, labels: jax.Array, vocab_size: int) -> jax.Array:
+    """Mean token cross-entropy; logits may be vocab-padded (labels < vocab).
+
+    Padded vocabulary rows are masked to -inf so they carry no probability
+    mass (their embedding rows are random-init and untrained).
+    """
+    logits = logits.astype(F32)
+    if logits.shape[-1] > vocab_size:
+        vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(vocab_ids < vocab_size, logits, NEG)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,87 @@
+"""Mixture-of-Experts layer: GShard-style top-k dispatch/combine einsums.
+
+Covers both assigned MoE architectures:
+  * arctic-480b    — 128 experts, top-2, plus a *dense residual* FFN computed
+    in parallel with the MoE branch every layer (Snowflake Arctic).
+  * deepseek-moe-16b — fine-grained 64 routed experts top-6 plus 2 *shared*
+    experts that process every token (DeepSeekMoE). Shared experts are
+    algebraically a dense SwiGLU of width n_shared * d_ff_expert, so they are
+    fused into one dense MLP.
+
+Expert weights carry the "experts" logical axis -> sharded over the `model`
+mesh axis (EP); the SPMD partitioner lowers the dispatch/combine einsums into
+all-to-alls, which the roofline pass audits. Tokens route within their batch
+row (GShard groups) with capacity ``ceil(top_k * S * cf / E)``; overflow
+drops (counted in aux metrics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Param, dense_init
+from repro.models import layers as L
+
+F32 = jnp.float32
+
+
+def moe_init(key, cfg) -> dict:
+    mo = cfg.moe
+    d, e, f = cfg.d_model, mo.n_experts, mo.d_ff_expert
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d, e), ("embed", "experts"), F32),
+        "wi_gate": dense_init(ks[1], (e, d, f), ("experts", "embed", "expert_ff"), dt),
+        "wi_up": dense_init(ks[2], (e, d, f), ("experts", "embed", "expert_ff"), dt),
+        "wo": dense_init(ks[3], (e, f, d), ("experts", "expert_ff", "embed"), dt,
+                         scale=f ** -0.5),
+    }
+    if mo.n_shared:
+        p["shared"] = L.mlp_init(ks[4], cfg, d_ff=mo.n_shared * f)
+    if mo.dense_residual:
+        p["dense"] = L.mlp_init(ks[5], cfg, d_ff=cfg.d_ff)
+    return p
+
+
+def moe_apply(p, x, cfg):
+    """Returns (y, aux_loss). x: (B, S, D)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    e, k = mo.n_experts, mo.top_k
+    cap = max(1, int(mo.capacity_factor * k * s / e))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(F32), p["router"].value)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (B,S,E) f32
+    gates, idx = jax.lax.top_k(probs, k)                         # (B,S,K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx, e, dtype=F32)                   # (B,S,K,E)
+    # position of each (token, choice) in its expert's queue, in token order
+    flat = onehot.reshape(b, s * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(b, s, k, e)  # (B,S,K,E)
+    pos_tok = jnp.sum(pos * onehot, axis=-1)                     # (B,S,K)
+    keep = (pos_tok < cap).astype(F32)                           # capacity drop
+    pos_oh = jax.nn.one_hot(pos_tok.astype(jnp.int32), cap, dtype=F32)
+
+    dt = x.dtype
+    dispatch = jnp.einsum("bske,bskc->bsec", onehot, pos_oh * keep[..., None]).astype(dt)
+    combine = jnp.einsum("bske,bskc->bsec", onehot * gates[..., None],
+                         pos_oh * keep[..., None]).astype(dt)
+
+    e_in = jnp.einsum("bsec,bsd->ebcd", dispatch, x)             # (E,B,C,D)
+    g = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", e_in, p["wi_gate"].value))
+    u = jnp.einsum("ebcd,edf->ebcf", e_in, p["wi_up"].value)
+    e_out = jnp.einsum("ebcf,efd->ebcd", g * u, p["wo"].value)
+    y = jnp.einsum("ebcd,bsec->bsd", e_out, combine)
+
+    if "shared" in p:
+        y = y + L.mlp(p["shared"], x)
+    if "dense" in p:
+        y = y + L.mlp(p["dense"], x)
+
+    # Switch-style load-balancing auxiliary loss
+    density = jnp.mean(onehot, axis=(0, 1, 2))                   # (E,)
+    mean_probs = jnp.mean(probs, axis=(0, 1))                    # (E,)
+    aux = e * jnp.sum(density * mean_probs) * mo.router_aux_weight
+    return y, aux

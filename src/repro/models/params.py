@@ -1,0 +1,122 @@
+"""Parameter trees with logical sharding axes.
+
+Every parameter is created as a ``Param(value, axes)`` where ``axes`` names
+the *logical* axis of each array dimension ("embed", "heads", "ff", "vocab",
+"experts", "layers", ...). ``split_tree`` separates values from axes;
+``pspec_tree`` maps logical names to mesh axes through a rules table — the
+one place the DP/TP/EP layout is decided (and the main §Perf hillclimbing
+lever).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Param:
+    """A parameter value tagged with logical axis names.
+
+    Registered as a pytree node (axes are static aux data) so Param trees pass
+    transparently through jit / grad / eval_shape / scan.
+    """
+    value: Any          # jax.Array | ShapeDtypeStruct
+    axes: tuple[Optional[str], ...]
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: Param(children[0], axes),
+)
+
+
+# Logical-axis -> mesh-axis rules. None = replicate. The default TP layout:
+# heads/ff/vocab/experts shard over "model"; everything else replicated
+# (DP gradients sync via psum, ZeRO-1 shards optimizer state over "data").
+DEFAULT_RULES: dict[str, Optional[str]] = {
+    "layers": None,
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "state": None,
+    "rnn": "model",
+    "conv": None,
+}
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_tree(tree):
+    """Param tree -> (values tree, axes tree)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def pspec_tree(axes_tree, rules: dict[str, Optional[str]] | None = None):
+    """Axes tree -> PartitionSpec tree via the rules table."""
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+
+    def to_pspec(axes):
+        return P(*(rules.get(a) if a is not None else None for a in axes))
+
+    return jax.tree.map(to_pspec, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def dense_init(key, shape, axes, dtype, scale: float | None = None) -> Param:
+    """Truncated-normal init with 1/sqrt(fan_in) default scale."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    v = (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * s)
+    return Param(v.astype(dtype), axes)
+
+
+def zeros_init(shape, axes, dtype) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+def sharding_tree(params_tree, mesh, rules: dict[str, Optional[str]] | None = None):
+    """Param tree -> matching tree of NamedSharding (jit in_shardings)."""
+    from jax.sharding import NamedSharding
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+
+    def f(p: Param):
+        return NamedSharding(mesh, P(*(rules.get(a) for a in p.axes)))
+
+    return jax.tree.map(f, params_tree, is_leaf=is_param)
+
+
+def abstract_like(tree):
+    """Param tree -> same tree with ShapeDtypeStruct values (no allocation)."""
+    return jax.tree.map(
+        lambda p: Param(jax.ShapeDtypeStruct(p.value.shape, p.value.dtype), p.axes),
+        tree, is_leaf=is_param)
+
+
+def count_params(values_tree) -> int:
+    return sum(int(np.prod(v.shape)) for v in jax.tree.leaves(values_tree))
+
+
+def stack_layer_params(per_layer: list):
+    """Stack a list of identical param trees along a new 'layers' axis."""
+    def stack(*ps):
+        return Param(jnp.stack([p.value for p in ps]), ("layers",) + ps[0].axes)
+    return jax.tree.map(stack, *per_layer, is_leaf=is_param)

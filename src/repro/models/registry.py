@@ -1,0 +1,196 @@
+"""Model registry: ModelConfig -> runnable model + sharding policy + specs.
+
+The per-arch TP policy (DESIGN.md §5): with a fixed 16-wide `model` mesh axis,
+attention sharding adapts to head divisibility —
+
+  policy A: heads and kv_heads both divide 16     -> shard both (full TP attn)
+  policy B: only heads divide 16                  -> shard q heads, replicate kv
+  policy C: heads don't divide 16                 -> replicate attention,
+            TP carries the FFN / experts / vocab (the parameter bulk)
+
+FFN (d_ff), experts, vocab (padded to 256) and SSM/RNN inner dims divide 16
+for every assigned architecture, so those always shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.models.encdec import EncDecLM
+from repro.models.params import DEFAULT_RULES
+from repro.models.transformer import DecoderLM, vocab_padded
+
+TP = 16  # model-axis width of the production mesh
+
+
+def build_model(cfg):
+    if cfg.family == "audio" and cfg.encoder_layers:
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)
+
+
+def attn_policy(cfg, tp: int = TP) -> str:
+    if cfg.family == "ssm":
+        return "A"  # ssm heads checked below
+    if cfg.n_heads % tp == 0 and cfg.n_kv_heads % tp == 0:
+        return "A"
+    if cfg.n_heads % tp == 0:
+        return "B"
+    return "C"
+
+
+def sharding_rules(cfg, tp: int = TP) -> dict[str, Optional[str]]:
+    rules = dict(DEFAULT_RULES)
+    pol = attn_policy(cfg, tp)
+    if cfg.family == "ssm":
+        h_ssm = cfg.ssm.expand * cfg.d_model // cfg.ssm.head_dim
+        rules["heads"] = "model" if h_ssm % tp == 0 else None
+        rules["kv_heads"] = None
+    elif pol == "B":
+        rules["kv_heads"] = None
+    elif pol == "C":
+        rules["heads"] = None
+        rules["kv_heads"] = None
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# shape applicability (spec-mandated skips) and input specs
+# ---------------------------------------------------------------------------
+def shape_applicable(cfg, shape_name: str) -> tuple[bool, str]:
+    seq, batch, kind = SHAPES[shape_name]
+    if shape_name == "long_500k":
+        bounded = (cfg.family in ("ssm", "hybrid")
+                   or cfg.sliding_window is not None)
+        if not bounded:
+            return False, ("pure full attention: 500k decode needs an O(500k)-"
+                           "resident KV cache built by a quadratic prefill "
+                           "(DESIGN.md §4)")
+    return True, ""
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """Everything dryrun/train/serve need for one (arch x shape) cell."""
+    arch: str
+    shape: str
+    kind: str                 # train | prefill | decode
+    inputs: dict              # name -> ShapeDtypeStruct
+    input_pspecs: dict        # name -> PartitionSpec
+    cache_specs: Any = None   # decode only: pytree of ShapeDtypeStruct
+    cache_pspecs: Any = None
+
+
+def _token_specs(cfg, seq: int, batch: int, kind: str, ba) -> tuple[dict, dict]:
+    """Token/label/frontend-stub specs for train/prefill."""
+    dt_emb = jnp.dtype(cfg.param_dtype)
+    inputs: dict = {}
+    pspecs: dict = {}
+    if cfg.family == "audio" and cfg.encoder_layers:
+        enc_len = max(8, seq // 4)
+        inputs["enc_embeds"] = jax.ShapeDtypeStruct((batch, enc_len, cfg.d_model), dt_emb)
+        pspecs["enc_embeds"] = P(ba, None, None)
+        inputs["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        pspecs["tokens"] = P(ba, None)
+        if kind == "train":
+            inputs["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+            pspecs["labels"] = P(ba, None)
+        return inputs, pspecs
+    text_len = seq - cfg.n_prefix_embeds
+    assert text_len > 0, (seq, cfg.n_prefix_embeds)
+    inputs["tokens"] = jax.ShapeDtypeStruct((batch, text_len), jnp.int32)
+    pspecs["tokens"] = P(ba, None)
+    if cfg.n_prefix_embeds:
+        inputs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_prefix_embeds, cfg.d_model), dt_emb)
+        pspecs["prefix_embeds"] = P(ba, None, None)
+    if kind == "train":
+        # labels cover the full (prefix + text) output positions minus prefix
+        inputs["labels"] = jax.ShapeDtypeStruct((batch, text_len), jnp.int32)
+        pspecs["labels"] = P(ba, None)
+    return inputs, pspecs
+
+
+def cache_pspecs_for(cfg, cache_specs, batch: int, multi_pod: bool, rules):
+    """PartitionSpec tree matching an init_cache pytree."""
+    ba = batch_axes(multi_pod)
+    b_spec = ba if batch > 1 else None
+    heads_rule = rules.get("heads")
+    kv_rule = rules.get("kv_heads")
+
+    def spec_for(path_leaf, arr):
+        # leaf names: k/v (L,B,slots,KV,hd); k_scale/v_scale (L,B,slots,KV,1);
+        # kmin/kmax (L,B,nb,KV,hd); ssm (L,B,H,hd,state); conv_* (L,B,W,C);
+        # h (L,B,dr); pos (B,)
+        nd = arr.ndim
+        if nd == 1:
+            return P(b_spec)
+        if nd == 5 and path_leaf in ("k", "v", "xk", "xv", "k_scale", "v_scale",
+                                     "kmin", "kmax"):
+            if kv_rule == "model":
+                return P(None, b_spec, None, "model", None)
+            # kv replicated over model: shard cache slots/blocks over model
+            slots = arr.shape[2]
+            slot_axes = "model" if slots % TP == 0 else None
+            return P(None, b_spec, slot_axes, None, None)
+        if nd == 5:  # ssm state (L,B,H,hd,state)
+            return P(None, b_spec, heads_rule, None, None)
+        if nd == 4:  # conv state (L,B,W,C) or group-stacked (G,B,w,dr)
+            return P(None, b_spec, None, "model")
+        if nd == 3:  # h (L,B,dr)
+            return P(None, b_spec, "model")
+        if nd == 2:
+            return P(None, b_spec)
+        return P(*([None] * nd))
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: (spec_for(k, v) if hasattr(v, "ndim") else walk(v))
+                    for k, v in tree.items()}
+        return tree
+
+    return walk(cache_specs)
+
+
+def make_cell(arch: str, shape_name: str, multi_pod: bool = False,
+              cfg=None) -> CellSpec:
+    """Build the (inputs, pspecs, cache) bundle for one dry-run cell."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    seq, batch, kind = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name} skipped: {why}")
+    ba = batch_axes(multi_pod)
+    rules = sharding_rules(cfg)
+    model = build_model(cfg)
+
+    if kind in ("train", "prefill"):
+        inputs, pspecs = _token_specs(cfg, seq, batch, kind, ba)
+        return CellSpec(arch, shape_name, kind, inputs, pspecs)
+
+    # decode: one new token against a cache of seq_len
+    dt = jnp.dtype(cfg.param_dtype)
+    if cfg.family == "audio" and cfg.encoder_layers:
+        cache_specs = jax.eval_shape(
+            lambda: model.init_cache(batch, seq, dt, enc_len=max(8, seq // 4)))
+    else:
+        cache_specs = jax.eval_shape(lambda: model.init_cache(batch, seq, dt))
+    inputs = {
+        "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+    b_spec = ba if batch > 1 else None
+    pspecs = {"tokens": P(b_spec, None), "pos": P(b_spec)}
+    cache_p = cache_pspecs_for(cfg, cache_specs, batch, multi_pod, rules)
+    return CellSpec(arch, shape_name, kind, inputs, pspecs,
+                    cache_specs=cache_specs, cache_pspecs=cache_p)

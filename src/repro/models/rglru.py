@@ -1,0 +1,93 @@
+"""RG-LRU recurrent blocks (Griffin / RecurrentGemma — arXiv:2402.19427).
+
+Recurrent sublayer: in-proj -> causal depthwise conv(4) -> RG-LRU -> gated
+merge -> out-proj. The RG-LRU update:
+
+    r_t = sigmoid(w_r . x_t + b_r)          (recurrence gate, per channel)
+    i_t = sigmoid(w_i . x_t + b_i)          (input gate, per channel)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan over the sequence (O(log L) depth);
+decoding is the single-step update. Gates are per-channel diagonal (the
+upstream implementation uses block-diagonal per-head linear gates; the
+diagonal form keeps every sharded axis trivially divisible — noted in
+DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Param, dense_init, ones_init, zeros_init
+from repro.models.ssm import _causal_dconv, _dconv_step
+
+F32 = jnp.float32
+C_MAG = 8.0
+
+
+def rglru_init(key, cfg) -> dict:
+    d = cfg.d_model
+    dr = d  # lru width = d_model (RecurrentGemma-2B: 2560)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    # Lambda init so a ~ Uniform(0.9, 0.999) at r=1 (paper App. A)
+    u = jax.random.uniform(ks[3], (dr,), F32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / C_MAG))  # softplus^{-1}(-log a / c)
+    return {
+        "w_in": dense_init(ks[0], (d, dr), ("embed", "rnn"), dt),
+        "w_gate": dense_init(ks[1], (d, dr), ("embed", "rnn"), dt),
+        "conv": dense_init(ks[2], (4, dr), ("conv", "rnn"), dt, scale=0.5),
+        "w_r": ones_init((dr,), ("rnn",), F32),
+        "b_r": zeros_init((dr,), ("rnn",), F32),
+        "w_i": ones_init((dr,), ("rnn",), F32),
+        "b_i": zeros_init((dr,), ("rnn",), F32),
+        "lam": Param(lam, ("rnn",)),
+        "w_out": dense_init(jax.random.fold_in(key, 7), (dr, d), ("rnn", "embed"), dt),
+    }
+
+
+def _gates(p, x):
+    """x: (..., dr) -> (a, gated_input) in f32."""
+    xf = x.astype(F32)
+    r = jax.nn.sigmoid(xf * p["w_r"].value + p["b_r"].value)
+    i = jax.nn.sigmoid(xf * p["w_i"].value + p["b_i"].value)
+    log_a = -C_MAG * jax.nn.softplus(p["lam"].value) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * xf)
+
+
+def rglru_train(p, x, cfg):
+    """Full-sequence recurrent sublayer. x: (B, L, D) -> (B, L, D)."""
+    u = _causal_dconv(jnp.einsum("bld,de->ble", x, p["w_in"].value), p["conv"].value)
+    a, bx = _gates(p, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = h.astype(x.dtype)
+    gate = jax.nn.gelu(jnp.einsum("bld,de->ble", x, p["w_gate"].value))
+    return jnp.einsum("ble,ed->bld", h * gate, p["w_out"].value)
+
+
+def rglru_init_state(cfg, batch: int, dtype) -> dict:
+    dr = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), F32),
+        "conv": jnp.zeros((batch, 3, dr), dtype),
+    }
+
+
+def rglru_decode(p, x1, state, cfg):
+    """One-token decode. x1: (B, 1, D)."""
+    xin = jnp.einsum("bd,de->be", x1[:, 0, :], p["w_in"].value)
+    u, conv_st = _dconv_step(state["conv"], xin, p["conv"].value)
+    a, bx = _gates(p, u)
+    h = a * state["h"] + bx
+    gate = jax.nn.gelu(jnp.einsum("bd,de->be", x1[:, 0, :], p["w_gate"].value))
+    y = jnp.einsum("be,ed->bd", h.astype(x1.dtype) * gate, p["w_out"].value)
+    return y[:, None, :], {"h": h, "conv": conv_st}

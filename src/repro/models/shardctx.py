@@ -1,0 +1,56 @@
+"""Tracing-time sharding context for in-model sharding constraints.
+
+Optimization passes (§Perf) need ``with_sharding_constraint`` inside layer
+code, which requires the mesh. The launcher/dry-run sets this context before
+tracing; when unset (tests, single-device runs) every constraint is a no-op,
+so model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: dict = {"mesh": None, "batch_axes": ("data",)}
+
+
+def set_ctx(mesh: Optional[Mesh], batch_axes: tuple = ("data",)) -> None:
+    _CTX["mesh"] = mesh
+    _CTX["batch_axes"] = tuple(batch_axes)
+
+
+@contextlib.contextmanager
+def ctx(mesh: Optional[Mesh], batch_axes: tuple = ("data",)):
+    prev = dict(_CTX)
+    set_ctx(mesh, batch_axes)
+    try:
+        yield
+    finally:
+        _CTX.update(prev)
+
+
+def mesh() -> Optional[Mesh]:
+    return _CTX["mesh"]
+
+
+def batch_axes() -> tuple:
+    return _CTX["batch_axes"]
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint when a mesh is set; identity otherwise."""
+    m = _CTX["mesh"]
+    if m is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(m, spec))
+
+
+def batch_model_axes() -> Optional[tuple]:
+    """Mesh axes for 2D batch sharding (batch over data axes + model), or
+    None when no mesh is set."""
+    m = _CTX["mesh"]
+    if m is None:
+        return None
+    return tuple(_CTX["batch_axes"]) + ("model",)

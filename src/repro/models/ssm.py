@@ -1,0 +1,204 @@
+"""Mamba-2 SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Training path: the chunked SSD algorithm (paper §6) — intra-chunk quadratic
+attention-like term + inter-chunk state recurrence via lax.scan. Decode path:
+O(1) recurrent state update per token.
+
+Sharding: the inner ("rnn") feature axis and the SSM heads shard over the
+`model` mesh axis; projections are kept *separate* (W_z/W_x/W_B/W_C/W_dt
+instead of one fused in-projection) so every sharded axis slices on shard
+boundaries (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Param, dense_init, ones_init, zeros_init
+
+F32 = jnp.float32
+
+
+def ssm_init(key, cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    h = d_in // s.head_dim
+    gn = s.n_groups * s.state_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_z": dense_init(ks[0], (d, d_in), ("embed", "rnn"), dt),
+        "w_x": dense_init(ks[1], (d, d_in), ("embed", "rnn"), dt),
+        "w_B": dense_init(ks[2], (d, gn), ("embed", "state"), dt),
+        "w_C": dense_init(ks[3], (d, gn), ("embed", "state"), dt),
+        "w_dt": dense_init(ks[4], (d, h), ("embed", "heads"), dt),
+        "conv_x": dense_init(ks[5], (s.conv_width, d_in), ("conv", "rnn"), dt, scale=0.5),
+        "conv_B": dense_init(ks[6], (s.conv_width, gn), ("conv", "state"), dt, scale=0.5),
+        "conv_C": dense_init(ks[7], (s.conv_width, gn), ("conv", "state"), dt, scale=0.5),
+        # A in (-1, 0): A = -exp(A_log); init A in [-1, -0.5]
+        "A_log": Param(jnp.log(jnp.linspace(0.5, 1.0, h)).astype(F32), ("heads",)),
+        "dt_bias": zeros_init((h,), ("heads",), F32),
+        "D": ones_init((h,), ("heads",), F32),
+        "norm": ones_init((d_in,), ("rnn",), F32),
+        "w_out": dense_init(jax.random.fold_in(key, 99), (d_in, d),
+                            ("rnn", "embed"), dt),
+    }
+    return p
+
+
+def _causal_dconv(x, w):
+    """Depthwise causal 1-D conv. x: (B, L, C); w: (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out
+
+
+def _segsum(x):
+    """(..., T) -> (..., T, T) lower-triangular segment sums (SSD decay)."""
+    t = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    d = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(xh, dth, a, bh, ch, chunk: int):
+    """Chunked SSD scan (Dao & Gu 2024, minimal listing, jnp).
+
+    Args:
+      xh: (B, L, H, P) inputs (already dt-weighted NOT applied; we apply here).
+      dth: (B, L, H) positive step sizes.
+      a: (H,) negative continuous-time decay.
+      bh, ch: (B, L, H, N) input/output projections (expanded per head).
+      chunk: chunk length (L % chunk == 0).
+
+    Returns:
+      (B, L, H, P) outputs and final state (B, H, P, N).
+    """
+    b, l, h, p = xh.shape
+    n = bh.shape[-1]
+    nc = l // chunk
+    xb = (xh * dth[..., None]).reshape(b, nc, chunk, h, p)
+    ab = (a[None, None, :] * dth).reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)
+    bb = bh.reshape(b, nc, chunk, h, n)
+    cb = ch.reshape(b, nc, chunk, h, n)
+
+    a_cs = jnp.cumsum(ab, axis=-1)                    # (B,H,C,Lc)
+    decay = jnp.exp(_segsum(ab.astype(F32)))          # (B,H,C,Lc,Lc)
+
+    # intra-chunk (quadratic within chunk)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        cb, bb, decay.astype(xh.dtype), xb)
+
+    # chunk-final states
+    decay_states = jnp.exp((a_cs[..., -1:] - a_cs).astype(F32)).astype(xh.dtype)
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn", bb, decay_states, xb)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cs[..., -1].astype(F32)).astype(xh.dtype)  # (B,H,C)
+
+    def step(s_prev, inp):
+        dec_c, st_c = inp  # (B,H), (B,H,P,N)
+        s = s_prev * dec_c[..., None, None] + st_c
+        return s, s_prev
+
+    s0 = jnp.zeros((b, h, p, n), xh.dtype)
+    s_final, s_before = jax.lax.scan(
+        step, s0,
+        (chunk_decay.transpose(2, 0, 1), states.transpose(1, 0, 2, 3, 4)))
+    s_before = s_before.transpose(1, 0, 2, 3, 4)      # (B,C,H,P,N)
+
+    state_decay_out = jnp.exp(a_cs.astype(F32)).astype(xh.dtype)  # (B,H,C,Lc)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", cb, s_before, state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, s_final
+
+
+def ssm_train(p, x, cfg):
+    """Full-sequence Mamba-2 mixer. x: (B, L, D) -> (B, L, D)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    z = jnp.einsum("bld,de->ble", x, p["w_z"].value)
+    xc = _causal_dconv(jnp.einsum("bld,de->ble", x, p["w_x"].value), p["conv_x"].value)
+    bc = _causal_dconv(jnp.einsum("bld,de->ble", x, p["w_B"].value), p["conv_B"].value)
+    cc = _causal_dconv(jnp.einsum("bld,de->ble", x, p["w_C"].value), p["conv_C"].value)
+    xc, bc, cc = jax.nn.silu(xc), jax.nn.silu(bc), jax.nn.silu(cc)
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, p["w_dt"].value).astype(F32)
+        + p["dt_bias"].value)
+    a = -jnp.exp(p["A_log"].value)                    # (H,) negative
+
+    bl, l = x.shape[0], x.shape[1]
+    xh = xc.reshape(bl, l, h, s.head_dim)
+    # expand groups to heads (n_groups=1: broadcast)
+    reps = h // s.n_groups
+    bh = jnp.repeat(bc.reshape(bl, l, s.n_groups, s.state_dim), reps, axis=2)
+    ch = jnp.repeat(cc.reshape(bl, l, s.n_groups, s.state_dim), reps, axis=2)
+
+    y, _ = ssd_chunked(xh, dt.astype(x.dtype), a, bh, ch, min(s.chunk, l))
+    y = y + xh * p["D"].value[None, None, :, None].astype(x.dtype)
+    y = y.reshape(bl, l, d_in)
+    # gated RMSNorm then out-projection (Mamba-2 block tail)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(p["norm"].value, y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, p["w_out"].value)
+
+
+def ssm_init_state(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    gn = s.n_groups * s.state_dim
+    w = s.conv_width - 1
+    return {
+        "ssm": jnp.zeros((batch, h, s.head_dim, s.state_dim), dtype),
+        "conv_x": jnp.zeros((batch, w, d_in), dtype),
+        "conv_B": jnp.zeros((batch, w, gn), dtype),
+        "conv_C": jnp.zeros((batch, w, gn), dtype),
+    }
+
+
+def _dconv_step(state, xnew, w):
+    """One causal depthwise conv step. state: (B, W-1, C); xnew: (B, C)."""
+    full = jnp.concatenate([state, xnew[:, None, :]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", full, w)
+    return y, full[:, 1:, :]
+
+
+def ssm_decode(p, x1, state, cfg):
+    """One-token decode. x1: (B, 1, D); state from ssm_init_state."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    x = x1[:, 0, :]
+    z = jnp.einsum("bd,de->be", x, p["w_z"].value)
+    xc, st_x = _dconv_step(state["conv_x"], jnp.einsum("bd,de->be", x, p["w_x"].value), p["conv_x"].value)
+    bc, st_b = _dconv_step(state["conv_B"], jnp.einsum("bd,de->be", x, p["w_B"].value), p["conv_B"].value)
+    cc, st_c = _dconv_step(state["conv_C"], jnp.einsum("bd,de->be", x, p["w_C"].value), p["conv_C"].value)
+    xc, bc, cc = jax.nn.silu(xc), jax.nn.silu(bc), jax.nn.silu(cc)
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dh->bh", x, p["w_dt"].value).astype(F32) + p["dt_bias"].value)
+    a = -jnp.exp(p["A_log"].value)
+    da = jnp.exp(dt * a[None, :]).astype(x.dtype)                 # (B,H)
+
+    reps = h // s.n_groups
+    bh = jnp.repeat(bc.reshape(-1, s.n_groups, s.state_dim), reps, axis=1)
+    ch = jnp.repeat(cc.reshape(-1, s.n_groups, s.state_dim), reps, axis=1)
+    xh = xc.reshape(-1, h, s.head_dim)
+
+    new_ssm = (state["ssm"] * da[..., None, None]
+               + jnp.einsum("bhp,bhn,bh->bhpn", xh, bh, dt.astype(x.dtype)))
+    y = jnp.einsum("bhn,bhpn->bhp", ch, new_ssm)
+    y = y + xh * p["D"].value[None, :, None].astype(x.dtype)
+    y = y.reshape(-1, d_in)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(p["norm"].value, y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["w_out"].value)
+    new_state = {"ssm": new_ssm, "conv_x": st_x, "conv_B": st_b, "conv_C": st_c}
+    return out[:, None, :], new_state

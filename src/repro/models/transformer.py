@@ -1,0 +1,412 @@
+"""Decoder-only LM assembly for the dense / moe / ssm / hybrid / vlm / audio
+(decoder) families.
+
+Layer stacks are scanned (``lax.scan`` over stacked per-layer params) so HLO
+stays compact at 512-way SPMD; remat wraps the per-layer body. Hybrid
+(Griffin) stacks scan over (rec, rec, attn) *groups* plus a small scanned
+tail, matching RecurrentGemma's 26 = 8*3 + 2 pattern exactly.
+
+Three entry points per model (built in registry.py):
+  * ``loss_fn(params, batch)``            -> (loss, metrics)        [train]
+  * ``prefill(params, batch)``            -> (logits, cache)        [prefill]
+  * ``decode_step(params, cache, tokens, pos)`` -> (logits, cache)  [decode]
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.params import Param, stack_layer_params
+from repro.models import shardctx
+
+F32 = jnp.float32
+VOCAB_MULT = 256  # pad vocab to a multiple of this (divisible by model axis)
+
+
+def vocab_padded(cfg) -> int:
+    return L.round_up(cfg.vocab_size, VOCAB_MULT)
+
+
+# ---------------------------------------------------------------------------
+# per-layer blocks
+# ---------------------------------------------------------------------------
+def dense_layer_init(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(ks[0], cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(ks[1], cfg),
+    }
+
+
+def moe_layer_init(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(ks[0], cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "moe": M.moe_init(ks[1], cfg),
+    }
+
+
+def ssm_layer_init(key, cfg) -> dict:
+    return {"ln1": L.rmsnorm_init(cfg.d_model), "ssm": S.ssm_init(key, cfg)}
+
+
+def rec_layer_init(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "rec": R.rglru_init(ks[0], cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(ks[1], cfg),
+    }
+
+
+def _attn_window(cfg) -> Optional[int]:
+    return cfg.sliding_window
+
+
+def dense_layer_train(lp, x, positions, cfg, window=None):
+    x = x + L.mha_train(lp["attn"], L.rmsnorm(lp["ln1"].value, x, cfg.norm_eps),
+                        positions, cfg, window=window)
+    x = x + L.mlp(lp["mlp"], L.rmsnorm(lp["ln2"].value, x, cfg.norm_eps))
+    return x, jnp.zeros((), F32)
+
+
+def moe_layer_train(lp, x, positions, cfg):
+    x = x + L.mha_train(lp["attn"], L.rmsnorm(lp["ln1"].value, x, cfg.norm_eps),
+                        positions, cfg, window=_attn_window(cfg))
+    y, aux = M.moe_apply(lp["moe"], L.rmsnorm(lp["ln2"].value, x, cfg.norm_eps), cfg)
+    return x + y, aux
+
+
+def ssm_layer_train(lp, x, positions, cfg):
+    x = x + S.ssm_train(lp["ssm"], L.rmsnorm(lp["ln1"].value, x, cfg.norm_eps), cfg)
+    return x, jnp.zeros((), F32)
+
+
+def rec_layer_train(lp, x, positions, cfg):
+    x = x + R.rglru_train(lp["rec"], L.rmsnorm(lp["ln1"].value, x, cfg.norm_eps), cfg)
+    x = x + L.mlp(lp["mlp"], L.rmsnorm(lp["ln2"].value, x, cfg.norm_eps))
+    return x, jnp.zeros((), F32)
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat != "none" else fn
+
+
+def _tree_slice(t, i):
+    return jax.tree.map(lambda a: a[i], t)
+
+
+def _tree_stack(ts):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+
+
+def _scan_with_cache(params_stacked, cache_stacked, x, body, unroll: bool):
+    """Layer loop threading x and emitting per-layer new cache.
+
+    body(layer_params, cache_slice, x) -> (x, new_cache_slice).
+    """
+    if unroll:
+        n = jax.tree.leaves(params_stacked)[0].shape[0]
+        outs = []
+        for i in range(n):
+            x, nc = body(_tree_slice(params_stacked, i),
+                         _tree_slice(cache_stacked, i), x)
+            outs.append(nc)
+        return x, _tree_stack(outs)
+
+    def step(x, inp):
+        lp, cs = inp
+        return body(lp, cs, x)
+
+    return jax.lax.scan(step, x, (params_stacked, cache_stacked))
+
+
+def _scan_stack(stacked, x, body, unroll: bool = False):
+    """Apply a stacked-layer body L times.
+
+    ``unroll=False`` (default): lax.scan — compact HLO, production path.
+    ``unroll=True``: python loop — used by the dry-run cost extraction because
+    XLA's cost analysis counts a while-loop body once instead of trip-count
+    times (measured; see EXPERIMENTS.md §Roofline methodology).
+    """
+    if unroll:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        aux = jnp.zeros((), F32)
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], stacked)
+            x, aux_l = body(lp, x)
+            aux = aux + aux_l
+        return x, aux
+
+    def step(carry, lp):
+        x, aux = carry
+        y, aux_l = body(lp, x)
+        return (y, aux + aux_l), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), F32)), stacked)
+    return x, aux
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderLM:
+    """Family-dispatching decoder-only LM."""
+
+    cfg: Any
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        kemb, klayers, ktail = jax.random.split(key, 3)
+        params: dict = {
+            "embed": L.embedding_init(kemb, cfg, vocab_padded(cfg)),
+            "final_ln": L.rmsnorm_init(cfg.d_model),
+        }
+        if cfg.family == "hybrid":
+            n_groups, tail = divmod(cfg.n_layers, 3)
+            gkeys = jax.random.split(klayers, n_groups)
+            groups = [self._group_init(k) for k in gkeys]
+            params["groups"] = stack_layer_params(groups)
+            if tail:
+                tkeys = jax.random.split(ktail, tail)
+                params["tail"] = stack_layer_params(
+                    [rec_layer_init(k, cfg) for k in tkeys])
+        else:
+            layer_init = {"dense": dense_layer_init, "moe": moe_layer_init,
+                          "ssm": ssm_layer_init, "vlm": dense_layer_init,
+                          "audio": dense_layer_init}[cfg.family]
+            lkeys = jax.random.split(klayers, cfg.n_layers)
+            params["layers"] = stack_layer_params(
+                [layer_init(k, cfg) for k in lkeys])
+        return params
+
+    def _group_init(self, key) -> dict:
+        ks = jax.random.split(key, 3)
+        cfg = self.cfg
+        return {
+            "rec1": rec_layer_init(ks[0], cfg),
+            "rec2": rec_layer_init(ks[1], cfg),
+            "attn": dense_layer_init(ks[2], cfg),
+        }
+
+    # -- train forward ------------------------------------------------------
+    def _embed_inputs(self, params, batch):
+        """Token (+ optional modality-prefix) embedding -> (x, positions)."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"])
+        if cfg.n_prefix_embeds:
+            pre = batch["prefix_embeds"].astype(x.dtype)  # (B, P, D) stub frontend
+            x = jnp.concatenate([pre, x], axis=1)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        return x, positions
+
+    def forward(self, params, batch):
+        """(B, S) tokens -> (B, S_total, vocab_pad) logits, aux loss."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        x, aux = self._run_stack(params, x, positions)
+        x = L.rmsnorm(params["final_ln"].value, x, cfg.norm_eps)
+        logits = L.unembed(params["embed"], x, cfg.tie_embeddings)
+        return logits, aux
+
+    def _run_stack(self, params, x, positions):
+        cfg = self.cfg
+        if cfg.seq_shard_resid and shardctx.mesh() is not None:
+            # §Perf: residual stream seq-sharded over `model` between blocks;
+            # the partitioner then gathers whichever side (weights vs
+            # activations) is cheaper per einsum — audited via the HLO.
+            from jax.sharding import PartitionSpec as P
+            ba = shardctx.batch_axes()
+            if x.shape[1] % shardctx.mesh().shape["model"] == 0:
+                x = shardctx.constrain(x, P(ba, "model", None))
+        if cfg.family == "hybrid":
+            def group_body(lp, x):
+                x, a1 = rec_layer_train(lp["rec1"], x, positions, cfg)
+                x, a2 = rec_layer_train(lp["rec2"], x, positions, cfg)
+                x, a3 = dense_layer_train(lp["attn"], x, positions, cfg,
+                                          window=cfg.local_window)
+                return x, a1 + a2 + a3
+            x, aux = _scan_stack(params["groups"], x,
+                                 _maybe_remat(group_body, cfg),
+                                 unroll=not cfg.scan_layers)
+            if "tail" in params:
+                def tail_body(lp, x):
+                    return rec_layer_train(lp, x, positions, cfg)
+                x, aux2 = _scan_stack(params["tail"], x,
+                                      _maybe_remat(tail_body, cfg),
+                                      unroll=not cfg.scan_layers)
+                aux = aux + aux2
+        else:
+            body_fn = {
+                "dense": lambda lp, x: dense_layer_train(lp, x, positions, cfg,
+                                                         window=_attn_window(cfg)),
+                "vlm": lambda lp, x: dense_layer_train(lp, x, positions, cfg),
+                "audio": lambda lp, x: dense_layer_train(lp, x, positions, cfg),
+                "moe": lambda lp, x: moe_layer_train(lp, x, positions, cfg),
+                "ssm": lambda lp, x: ssm_layer_train(lp, x, positions, cfg),
+            }[cfg.family]
+            x, aux = _scan_stack(params["layers"], x, _maybe_remat(body_fn, cfg),
+                                 unroll=not cfg.scan_layers)
+        return x, aux
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        if cfg.n_prefix_embeds:  # loss only on the text suffix
+            logits = logits[:, cfg.n_prefix_embeds:, :]
+        loss = L.xent_loss(logits, batch["labels"], cfg.vocab_size)
+        total = loss + aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    # -- serving ------------------------------------------------------------
+    def init_cache(self, batch: int, slots: int, dtype) -> Any:
+        cfg = self.cfg
+        hd, kv = cfg.resolved_head_dim, cfg.n_kv_heads
+
+        def kv_slots(window):
+            return min(slots, window) if window else slots
+
+        if cfg.family == "ssm":
+            st = S.ssm_init_state(cfg, batch, dtype)
+            return {"layers": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), st),
+                "pos": jnp.zeros((batch,), jnp.int32)}
+        if cfg.family == "hybrid":
+            n_groups, tail = divmod(cfg.n_layers, 3)
+            w = kv_slots(cfg.local_window)
+            rec = R.rglru_init_state(cfg, batch, dtype)
+            group = {
+                "rec1": rec, "rec2": jax.tree.map(jnp.copy, rec),
+                "k": jnp.zeros((batch, w, kv, hd), dtype),
+                "v": jnp.zeros((batch, w, kv, hd), dtype),
+            }
+            cache = {"groups": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), group)}
+            if tail:
+                cache["tail"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (tail,) + a.shape), rec)
+            cache["pos"] = jnp.zeros((batch,), jnp.int32)
+            return cache
+        w = kv_slots(cfg.sliding_window)
+        kv_dt = jnp.int8 if cfg.kv_cache_int8 else dtype
+        cache = {
+            "k": jnp.zeros((cfg.n_layers, batch, w, kv, hd), kv_dt),
+            "v": jnp.zeros((cfg.n_layers, batch, w, kv, hd), kv_dt),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+        if cfg.kv_cache_int8:
+            cache["k_scale"] = jnp.zeros((cfg.n_layers, batch, w, kv, 1), F32)
+            cache["v_scale"] = jnp.zeros((cfg.n_layers, batch, w, kv, 1), F32)
+        if cfg.kv_block_prune:
+            nb = w // cfg.kv_block_size
+            big = jnp.asarray(3e38, F32)
+            cache["kmin"] = jnp.full((cfg.n_layers, batch, nb, kv, hd), big, F32)
+            cache["kmax"] = jnp.full((cfg.n_layers, batch, nb, kv, hd), -big, F32)
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B, 1) int32; pos: (B,) absolute positions."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens)
+        unroll = not cfg.scan_layers
+        if cfg.family == "ssm":
+            def body(lp, st, x):
+                xn = L.rmsnorm(lp["ln1"].value, x, cfg.norm_eps)
+                y, st2 = S.ssm_decode(lp["ssm"], xn, st, cfg)
+                return x + y, st2
+            x, new_states = _scan_with_cache(params["layers"], cache["layers"],
+                                             x, body, unroll)
+            new_cache = {"layers": new_states, "pos": pos + 1}
+        elif cfg.family == "hybrid":
+            def rec_dec(lp, x, st):
+                xn = L.rmsnorm(lp["ln1"].value, x, cfg.norm_eps)
+                y, st2 = R.rglru_decode(lp["rec"], xn, st, cfg)
+                x = x + y
+                x = x + L.mlp(lp["mlp"], L.rmsnorm(lp["ln2"].value, x, cfg.norm_eps))
+                return x, st2
+
+            def attn_dec(lp, x, k, v):
+                xn = L.rmsnorm(lp["ln1"].value, x, cfg.norm_eps)
+                y, k2, v2, _ = L.mha_decode(lp["attn"], xn, pos, k, v, cfg,
+                                            window=cfg.local_window)
+                x = x + y
+                x = x + L.mlp(lp["mlp"], L.rmsnorm(lp["ln2"].value, x, cfg.norm_eps))
+                return x, k2, v2
+
+            def gbody(lp, st, x):
+                x, s1 = rec_dec(lp["rec1"], x, st["rec1"])
+                x, s2 = rec_dec(lp["rec2"], x, st["rec2"])
+                x, k2, v2 = attn_dec(lp["attn"], x, st["k"], st["v"])
+                return x, {"rec1": s1, "rec2": s2, "k": k2, "v": v2}
+
+            x, new_groups = _scan_with_cache(params["groups"], cache["groups"],
+                                             x, gbody, unroll)
+            new_cache = {"groups": new_groups, "pos": pos + 1}
+            if "tail" in params:
+                def tbody(lp, st, x):
+                    return rec_dec(lp, x, st)
+                x, new_tail = _scan_with_cache(params["tail"], cache["tail"],
+                                               x, tbody, unroll)
+                new_cache["tail"] = new_tail
+        else:
+            window = _attn_window(cfg)
+
+            extra_keys = [k for k in ("k_scale", "v_scale", "kmin", "kmax")
+                          if k in cache]
+
+            def body(lp, cs, x):
+                xn = L.rmsnorm(lp["ln1"].value, x, cfg.norm_eps)
+                y, k2, v2, ex2 = L.mha_decode(
+                    lp["attn"], xn, pos, cs["k"], cs["v"], cfg, window=window,
+                    extras={k: cs[k] for k in extra_keys})
+                x = x + y
+                xn2 = L.rmsnorm(lp["ln2"].value, x, cfg.norm_eps)
+                if cfg.family == "moe":
+                    y2, _ = M.moe_apply(lp["moe"], xn2, cfg)
+                else:
+                    y2 = L.mlp(lp["mlp"], xn2)
+                out_cs = {"k": k2, "v": v2}
+                out_cs.update({k: ex2[k] for k in extra_keys})
+                return x + y2, out_cs
+
+            layer_cache = {k: cache[k] for k in ["k", "v"] + extra_keys}
+            x, ncache = _scan_with_cache(params["layers"], layer_cache,
+                                         x, body, unroll)
+            new_cache = dict(ncache)
+            new_cache["pos"] = pos + 1
+
+        x = L.rmsnorm(params["final_ln"].value, x, cfg.norm_eps)
+        logits = L.unembed(params["embed"], x, cfg.tie_embeddings)
+        return logits, new_cache
+
+    def prefill(self, params, batch):
+        """Inference forward over the full prompt -> (last-token logits, aux).
+
+        cfg.prefill_last_only (§Perf): unembed ONLY the final position — the
+        (B, S, vocab) logits tensor (and its flops) never exist. The baseline
+        path computes full logits then slices, which XLA does not narrow.
+        """
+        cfg = self.cfg
+        if not cfg.prefill_last_only:
+            logits, aux = self.forward(params, batch)
+            return logits[:, -1:, :], aux
+        x, positions = self._embed_inputs(params, batch)
+        x, aux = self._run_stack(params, x, positions)
+        x = L.rmsnorm(params["final_ln"].value, x[:, -1:, :], cfg.norm_eps)
+        return L.unembed(params["embed"], x, cfg.tie_embeddings), aux

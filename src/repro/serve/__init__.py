@@ -1,0 +1,6 @@
+"""repro.serve — decode steps, continuous batching, MDRQ admission."""
+from repro.serve.serve_step import make_serve_step, make_prefill, greedy_sample
+from repro.serve.batching import BatchServer, Request, admission_query
+
+__all__ = ["make_serve_step", "make_prefill", "greedy_sample",
+           "BatchServer", "Request", "admission_query"]

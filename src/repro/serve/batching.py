@@ -1,0 +1,117 @@
+"""Continuous batching with MDRQ-based admission control.
+
+The serving router is the second place the paper's engine is a first-class
+feature (DESIGN.md §3): each request carries a feature vector (priority,
+prompt length, SLO deadline, estimated cost, ...) and the admission filter is
+a partial-match MDRQ over the pending queue — planner-selected access path,
+exactly like the training pipeline's sample filter.
+
+The batcher keeps B decode slots hot: finished/empty slots are refilled from
+the admitted queue each step (continuous batching); prompts are prefilled
+token-by-token through the same decode path (small-scale container execution;
+the chunked ``prefill`` entry point exists for real deployments).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Dataset, MDRQEngine, RangeQuery
+from repro.serve.serve_step import greedy_sample, make_serve_step
+
+REQUEST_FEATURES = ["priority", "prompt_len", "deadline_ms", "est_cost"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new: int
+    features: np.ndarray          # (4,) float32
+    output: Optional[np.ndarray] = None
+
+
+def admission_query(max_cost: float = 0.8, min_priority: float = 0.2) -> RangeQuery:
+    return RangeQuery.partial(len(REQUEST_FEATURES),
+                              {0: (min_priority, 1.0), 3: (0.0, max_cost)})
+
+
+class BatchServer:
+    """Fixed-slot continuous batcher over a decode model."""
+
+    def __init__(self, model, params, slots: int = 4, max_len: int = 256):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cfg = model.cfg
+        dt = jnp.dtype(self.cfg.param_dtype)
+        self.cache = model.init_cache(slots, max_len, dt)
+        self.step_fn = jax.jit(make_serve_step(model), donate_argnums=(1,))
+        self.pos = np.zeros((slots,), np.int32)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.remaining = np.zeros((slots,), np.int32)
+        self.pending_tok = np.zeros((slots, 1), np.int32)
+        self.gen: list[list[int]] = [[] for _ in range(slots)]
+        self.to_feed: list[list[int]] = [[] for _ in range(slots)]
+        self.done: list[Request] = []
+
+    # -- admission ------------------------------------------------------------
+    @staticmethod
+    def admit(requests: list[Request], query: RangeQuery) -> list[Request]:
+        """MDRQ admission filter over the pending queue."""
+        if not requests:
+            return []
+        feats = Dataset(np.stack([r.features for r in requests]).T)
+        eng = MDRQEngine(feats, structures=("scan",))
+        ids = eng.query(query, method="scan_vertical")
+        return [requests[i] for i in ids]
+
+    # -- slot management --------------------------------------------------------
+    def _fill_slot(self, s: int, req: Request) -> None:
+        self.active[s] = req
+        self.remaining[s] = req.max_new
+        self.gen[s] = []
+        self.to_feed[s] = list(req.prompt.tolist())
+        self.pos[s] = 0
+        # reset slot cache region: positions restart; ring/full caches are
+        # masked by pos so stale keys beyond pos are never attended to.
+
+    def serve(self, requests: list[Request], query: Optional[RangeQuery] = None
+              ) -> list[Request]:
+        """Run until all admitted requests complete; returns finished list."""
+        queue = self.admit(requests, query or admission_query())
+        queue = queue[::-1]  # pop from the end
+        while queue or any(a is not None for a in self.active):
+            for s in range(self.slots):
+                if self.active[s] is None and queue:
+                    self._fill_slot(s, queue.pop())
+            toks = np.zeros((self.slots, 1), np.int32)
+            for s in range(self.slots):
+                if self.active[s] is None:
+                    continue
+                if self.to_feed[s]:
+                    toks[s, 0] = self.to_feed[s].pop(0)
+                else:
+                    toks[s, 0] = self.gen[s][-1]
+            logits, self.cache = self.step_fn(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.pos))
+            nxt = np.asarray(greedy_sample(logits, self.cfg.vocab_size))[:, 0]
+            for s in range(self.slots):
+                if self.active[s] is None:
+                    continue
+                self.pos[s] += 1
+                if not self.to_feed[s]:  # prompt consumed -> generating
+                    self.gen[s].append(int(nxt[s]))
+                    self.remaining[s] -= 1
+                    if self.remaining[s] <= 0 or self.pos[s] >= self.max_len - 1:
+                        req = self.active[s]
+                        req.output = np.asarray(self.gen[s], np.int32)
+                        self.done.append(req)
+                        self.active[s] = None
+        return self.done

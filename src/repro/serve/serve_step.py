@@ -1,0 +1,36 @@
+"""Serving steps: jit'd prefill and single-token decode.
+
+``serve_step`` is the function the decode dry-run cells lower: one new token
+against a KV/SSM/ring cache of ``seq_len`` — cache donated, so steady-state
+decode allocates nothing.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_serve_step(model) -> Callable:
+    """(params, cache, tokens(B,1), pos(B,)) -> (logits, cache')."""
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return serve_step
+
+
+def make_prefill(model) -> Callable:
+    """(params, batch) -> (last-token logits, aux)."""
+
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill
+
+
+def greedy_sample(logits: jax.Array, vocab_size: int) -> jax.Array:
+    """(B, 1, V_pad) -> (B, 1) argmax over the un-padded vocabulary."""
+    v = logits[..., :vocab_size]
+    return jnp.argmax(v, axis=-1).astype(jnp.int32)

@@ -1,0 +1,9 @@
+"""repro.train — optimizer, train step, checkpointing, fault-tolerant loop."""
+from repro.train.optimizer import OptConfig, init_opt_state, adamw_update, opt_state_pspecs
+from repro.train.train_step import make_train_step, compressed_psum
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import Trainer, TrainerConfig, SimulatedPreemption
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "opt_state_pspecs",
+           "make_train_step", "compressed_psum", "CheckpointManager",
+           "Trainer", "TrainerConfig", "SimulatedPreemption"]

@@ -1,0 +1,140 @@
+"""AdamW with mixed precision and ZeRO-1 optimizer-state sharding (pure JAX).
+
+Policy: parameters live in bf16 (the compute dtype); the optimizer state
+holds f32 master weights + first/second moments. ZeRO-1: every optimizer-state
+leaf is additionally sharded over the `data` mesh axis on the first free
+(unsharded, divisible) dimension — cutting optimizer memory by up to
+|data axis| with zero extra collectives beyond the partitioner-inserted
+gather at update time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import Param, is_param, DEFAULT_RULES
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac * peak."""
+    s = step.astype(F32)
+    warm = cfg.peak_lr * (s + 1.0) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_opt_state(params) -> dict:
+    """params: Param tree (bf16 values) -> opt state with f32 master/moments."""
+    # copy=True: f32 params must not alias the master buffer (donation safety)
+    master = jax.tree.map(lambda p: jnp.array(p.value, dtype=F32, copy=True),
+                          params, is_leaf=is_param)
+    zeros = jax.tree.map(jnp.zeros_like, master)
+    return {
+        "master": master,
+        "m": zeros,
+        "v": jax.tree.map(jnp.zeros_like, master),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(F32))) for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(params, grads_values, opt_state, cfg: OptConfig):
+    """One AdamW step.
+
+    Args:
+      params: Param tree (bf16 values).
+      grads_values: plain value tree (same structure as params' values), any
+        float dtype (cast to f32 internally).
+      opt_state: from init_opt_state.
+
+    Returns (new_params Param tree, new opt_state, metrics dict).
+    """
+    step = opt_state["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads_values)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(F32)
+    bc2 = 1.0 - b2 ** step.astype(F32)
+
+    def upd(master, m, v, g):
+        g = g.astype(F32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        master2 = master - lr * (update + cfg.weight_decay * master)
+        return master2, m2, v2
+
+    flat_master, tdef = jax.tree.flatten(opt_state["master"])
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    flat_g = tdef.flatten_up_to(grads_values)
+    out = [upd(a, b, c, d) for a, b, c, d in zip(flat_master, flat_m, flat_v, flat_g)]
+    master2 = jax.tree.unflatten(tdef, [o[0] for o in out])
+    m2 = jax.tree.unflatten(tdef, [o[1] for o in out])
+    v2 = jax.tree.unflatten(tdef, [o[2] for o in out])
+
+    def cast_back(p: Param, mv):
+        return Param(mv.astype(p.value.dtype), p.axes)
+
+    new_params = jax.tree.map(cast_back, params, master2, is_leaf=is_param)
+    new_state = {"master": master2, "m": m2, "v": v2, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding of the optimizer state
+# ---------------------------------------------------------------------------
+def zero1_pspec(axes: tuple, shape: tuple, rules: dict, data_axes=("data",),
+                data_size: int = 16) -> P:
+    """Param pspec with the first free divisible dim additionally data-sharded."""
+    base = [rules.get(a) if a is not None else None for a in axes]
+    for i, (r, s) in enumerate(zip(base, shape)):
+        if r is None and s % data_size == 0:
+            base[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            break
+    return P(*base)
+
+
+def opt_state_pspecs(params, rules: dict | None = None, data_axes=("data",),
+                     data_size: int = 16):
+    """PartitionSpec tree for init_opt_state(params) with ZeRO-1 layout."""
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+
+    def f(p: Param):
+        return zero1_pspec(p.axes, p.value.shape, rules, data_axes, data_size)
+
+    leaf_specs = jax.tree.map(f, params, is_leaf=is_param)
+    return {
+        "master": leaf_specs,
+        "m": leaf_specs,
+        "v": leaf_specs,
+        "step": P(),
+    }

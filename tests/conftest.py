@@ -1,0 +1,23 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 CPU device;
+multi-device behaviour is tested via subprocesses (test_distributed.py)."""
+import numpy as np
+import pytest
+
+from repro.core import Dataset
+
+
+@pytest.fixture(scope="session")
+def uni5():
+    rng = np.random.default_rng(42)
+    return Dataset(rng.random((5, 20_000), dtype=np.float32))
+
+
+@pytest.fixture(scope="session")
+def uni19():
+    rng = np.random.default_rng(43)
+    return Dataset(rng.random((19, 8_192), dtype=np.float32))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,96 @@
+"""§Perf optimization knobs: semantics preserved under every variant.
+
+Each knob must keep model function (or greedy behaviour) intact:
+  * prefill_last_only   — bit-equal last-token logits
+  * attn_scores_f32=False — bf16 streaming softmax within tolerance
+  * kv_cache_int8       — decode within quantization tolerance
+  * kv_block_prune (keep-all) — bit-equal decode
+  * kv_prune_groups (keep-all) — bit-equal decode
+  * seq_shard_resid / attn_batch_shard — no-ops without a mesh (tests run
+    single-device), exercised for real in the dry-run subprocess.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models.registry import build_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3_8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (2, 32)).astype(np.int32)
+    return cfg, params, toks
+
+
+def _decode_all(cfg, params, toks, slots=48):
+    model = build_model(cfg)
+    b = toks.shape[0]
+    cache = model.init_cache(b, slots, jnp.dtype(cfg.param_dtype))
+    dec = jax.jit(model.decode_step)
+    outs = []
+    for t in range(toks.shape[1]):
+        lg, cache = dec(params, cache, jnp.asarray(toks[:, t:t + 1]),
+                        jnp.full((b,), t, jnp.int32))
+        outs.append(np.asarray(lg, np.float32)[:, 0])
+    return np.stack(outs, 1)
+
+
+def test_prefill_last_only_equals_full(setup):
+    cfg, params, toks = setup
+    batch = {"tokens": jnp.asarray(toks)}
+    full, _ = build_model(cfg).prefill(params, batch)
+    last, _ = build_model(cfg.replace(prefill_last_only=True)).prefill(params, batch)
+    np.testing.assert_allclose(np.asarray(full, np.float32),
+                               np.asarray(last, np.float32), rtol=0, atol=1e-5)
+
+
+def test_bf16_scores_close(setup):
+    cfg, params, toks = setup
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+    l1 = float(build_model(cfg).loss_fn(params, batch)[0])
+    l2 = float(build_model(cfg.replace(attn_scores_f32=False)).loss_fn(params, batch)[0])
+    assert abs(l1 - l2) / l1 < 1e-2
+
+
+def test_int8_kv_decode_close(setup):
+    cfg, params, toks = setup
+    full = _decode_all(cfg, params, toks)
+    q8 = _decode_all(cfg.replace(kv_cache_int8=True), params, toks)
+    # random-init logits are near-flat; require bounded absolute deviation
+    assert np.abs(full - q8).max() < 0.15 * (np.abs(full).max() + 1.0)
+
+
+@pytest.mark.parametrize("groups", [0, 2])
+def test_keepall_prune_is_exact(setup, groups):
+    cfg, params, toks = setup
+    full = _decode_all(cfg, params, toks)
+    pruned = _decode_all(
+        cfg.replace(kv_block_prune=4, kv_block_size=16, kv_prune_groups=groups),
+        params, toks, slots=64)
+    np.testing.assert_allclose(full, pruned, rtol=0, atol=0.05)
+
+
+def test_zone_map_bound_is_valid():
+    """Property: q+.kmax + q-.kmin >= q.k for every key in the block."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        q = rng.normal(size=(8,))
+        keys = rng.normal(size=(32, 8))
+        kmin, kmax = keys.min(0), keys.max(0)
+        ub = np.maximum(q, 0) @ kmax + np.minimum(q, 0) @ kmin
+        assert (keys @ q <= ub + 1e-9).all()
+
+
+def test_seqshard_and_batchshard_noop_without_mesh(setup):
+    cfg, params, toks = setup
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+    base = float(build_model(cfg).loss_fn(params, batch)[0])
+    v1 = float(build_model(cfg.replace(seq_shard_resid=True)).loss_fn(params, batch)[0])
+    v2 = float(build_model(cfg.replace(attn_batch_shard=True)).loss_fn(params, batch)[0])
+    assert base == v1 == v2

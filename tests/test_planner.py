@@ -1,0 +1,72 @@
+"""Planner: selectivity estimation, cost-model structure, break-even bands."""
+import numpy as np
+import pytest
+
+from repro.core import Dataset, RangeQuery
+from repro.core.planner import BINS, CostModel, Histograms, Planner
+
+
+def test_histogram_estimates(uni5):
+    hist = Histograms.build(uni5)
+    # uniform data: sel of [0.2, 0.5] on one dim ~ 0.3
+    q = RangeQuery.partial(5, {2: (0.2, 0.5)})
+    est = hist.selectivity(q)
+    true = uni5.selectivity(q)
+    assert abs(est - true) < 0.03
+    # complete match multiplies per-dim estimates (independence, §2.1)
+    q2 = RangeQuery.complete([0.1] * 5, [0.6] * 5)
+    est2 = hist.selectivity(q2)
+    assert abs(est2 - 0.5 ** 5) < 0.02
+
+
+def test_histogram_edge_cases(uni5):
+    hist = Histograms.build(uni5)
+    assert hist.selectivity(RangeQuery.partial(5, {})) == 1.0
+    assert hist.selectivity(RangeQuery.partial(5, {0: (5.0, 6.0)})) == 0.0
+    assert hist.selectivity(RangeQuery.partial(5, {0: (-5.0, 5.0)})) == 1.0
+
+
+def test_break_even_band_paper_scale(uni5):
+    """At the paper's 1M x 5 scale the model's break-even must sit in the
+    'around 1%' band the paper reports (we accept 0.05%..5%)."""
+    hist = Histograms.build(uni5)
+    p = Planner(hist, CostModel(n=1_000_000, m=5))
+    be = p.break_even_selectivity()
+    assert 0.0005 < be < 0.05, be
+
+
+def test_small_datasets_prefer_scan(uni5):
+    """Paper Fig. 7: scans win outright for n <= 1e5."""
+    hist = Histograms.build(uni5)
+    p = Planner(hist, CostModel(n=50_000, m=5))
+    assert p.break_even_selectivity() == 0.0
+    q = RangeQuery.complete([0.0] * 5, [0.01] * 5)  # extremely selective
+    assert p.choose(q) in ("scan", "scan_vertical")
+
+
+def test_partial_match_prefers_vertical(uni19):
+    """Paper §8: partial-match over few dims -> vertically partitioned scan."""
+    hist = Histograms.build(uni19)
+    p = Planner(hist, CostModel(n=uni19.n, m=19))
+    q = RangeQuery.partial(19, {3: (0.4, 0.6), 7: (0.1, 0.9)})
+    plan = p.explain(q)
+    assert plan.costs["scan_vertical"] < plan.costs["scan"]
+
+
+def test_cost_monotone_in_selectivity():
+    model = CostModel(n=1_000_000, m=5)
+    sels = [1e-5, 1e-4, 1e-3, 1e-2, 1e-1]
+    qs = [RangeQuery.complete([0.0] * 5, [s ** 0.2] * 5) for s in sels]
+    costs = [model.cost_tree(q, s) for q, s in zip(qs, sels)]
+    assert all(a <= b + 1e-12 for a, b in zip(costs, costs[1:]))
+
+
+def test_calibration_refits_constants(uni5):
+    hist = Histograms.build(uni5)
+    p = Planner(hist, CostModel(n=uni5.n, m=5))
+    # synthetic measurements: 2x slower byte rate than the default
+    b = uni5.n * 5 * 4
+    samples = [("scan", b, b * 2 * p.model.sec_per_byte + 5e-6)] * 3
+    old = p.model.sec_per_byte
+    p.calibrate(samples)
+    assert p.model.sec_per_byte > old * 1.5
