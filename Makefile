@@ -1,0 +1,20 @@
+# Developer entry points. The tier-1 gate is exactly what CI runs.
+PYTHONPATH := src
+
+.PHONY: test smoke bench-throughput bench
+
+# Tier-1 verify: the full test suite, fail-fast.
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+# Fast interpret-mode smoke of the fused multi-query kernels (oracle-checked).
+smoke:
+	PYTHONPATH=src python -m pytest -q tests/test_multi_scan.py tests/test_kernels.py
+
+# Batched-execution throughput sweep (CPU: XLA proxy; TPU: Mosaic kernels).
+bench-throughput:
+	PYTHONPATH=src python -m benchmarks.run --only throughput
+
+# Full benchmark matrix (quick sizes).
+bench:
+	PYTHONPATH=src python -m benchmarks.run

@@ -1,0 +1,59 @@
+"""Batched-execution throughput: queries/sec over GMRQB template mixes.
+
+Sweeps the serving batch size over {1, 8, 32, 128} with the fused multi-query
+kernels underneath (``MDRQEngine.query_batch`` via ``MDRQServer``) — the
+inter-query analogue of the paper's intra-query scaling figures. Batch 1 is
+the seed engine's per-query regime, so the B{128}/B{1} speedup row is the
+amortization headline. Like every benchmark here, CPU numbers use the XLA
+backend as the honest proxy (see common.py); real kernel numbers are TPU.
+"""
+import numpy as np
+
+from benchmarks.common import emit_row
+from repro.core import MDRQEngine
+from repro.data import gmrqb
+from repro.serve.mdrq_server import MDRQServer
+
+BATCH_SIZES = (1, 8, 32, 128)
+
+
+def _throughput(eng, queries, batch: int, method: str = "auto"):
+    """(qps, whole-workload method_counts) through a fresh serving window."""
+    server = MDRQServer(eng, max_batch=batch, max_wait_s=float("inf"),
+                        method=method)
+    server.serve_all(queries[: 2 * batch])  # warmup (jit + retrace buckets)
+    server.stats = type(server.stats)()
+    server.serve_all(queries)
+    return server.stats.qps, server.stats.method_counts
+
+
+def run(quick: bool = True) -> None:
+    n = 200_000 if quick else 1_000_000
+    ds = gmrqb.build(n, seed=0)
+    eng = MDRQEngine(ds, structures=("scan", "kdtree", "vafile"))
+    n_queries = 128 if quick else 256
+
+    # Mixed workload (all 8 templates interleaved) across batch sizes.
+    mixed = [q for _, q in gmrqb.mixed_workload(ds, n_queries, seed=2)]
+    base = None
+    for b in BATCH_SIZES:
+        r, _ = _throughput(eng, mixed, b)
+        base = base or r
+        emit_row(f"throughput/mixed/B{b}", 1e6 / r,
+                 f"qps={r:.1f};speedup_vs_B1={r / base:.2f}x")
+
+    # Per-template mixes at the largest batch: which access path carries the
+    # throughput for each selectivity band.
+    rng = np.random.default_rng(3)
+    for k in (1, 4, 8):
+        queries = [gmrqb.template(k, rng, ds) for _ in range(n_queries)]
+        r, counts = _throughput(eng, queries, BATCH_SIZES[-1])
+        emit_row(f"throughput/T{k}/B{BATCH_SIZES[-1]}", 1e6 / r,
+                 f"qps={r:.1f};buckets={'+'.join(sorted(counts))}")
+
+    # Fixed-method sweep: isolates the fused-kernel win from planner choices.
+    for meth in ("scan", "scan_vertical"):
+        r1, _ = _throughput(eng, mixed, 1, method=meth)
+        rb, _ = _throughput(eng, mixed, BATCH_SIZES[-1], method=meth)
+        emit_row(f"throughput/{meth}/B{BATCH_SIZES[-1]}", 1e6 / rb,
+                 f"qps={rb:.1f};speedup_vs_B1={rb / r1:.2f}x")

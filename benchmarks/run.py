@@ -26,6 +26,7 @@ SECTIONS = [
     ("fig9", "benchmarks.bench_power"),
     ("fig10", "benchmarks.bench_gmrqb"),
     ("fig11", "benchmarks.bench_scaling"),
+    ("throughput", "benchmarks.bench_throughput"),
     ("mem", "benchmarks.bench_memory"),
     ("roofline", "benchmarks.bench_rooflines"),
 ]

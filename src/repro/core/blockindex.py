@@ -83,8 +83,98 @@ def prune_hierarchy(
     return active
 
 
-def _next_pow2(x: int) -> int:
-    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+@functools.partial(jax.jit, static_argnames=("fanout",))
+def prune_hierarchy_batch(
+    levels_lo: tuple[jax.Array, ...],
+    levels_hi: tuple[jax.Array, ...],
+    qlo: jax.Array,
+    qhi: jax.Array,
+    fanout: int,
+) -> jax.Array:
+    """Batched top-down MBR pruning: all queries of a batch in one jit call.
+
+    Args:
+      levels_lo/hi: root-first tuples of (m, n_nodes) MBR bounds.
+      qlo, qhi: (m, Q) query bounds, one column per query.
+
+    Returns:
+      (Q, n_leaves) bool — per-query leaf survivors.
+    """
+    active = None
+    for lo, hi in zip(levels_lo, levels_hi):
+        overlap = jnp.all(
+            jnp.logical_and(hi[:, None, :] >= qlo[:, :, None],
+                            lo[:, None, :] <= qhi[:, :, None]),
+            axis=0,
+        )  # (Q, n_nodes)
+        if active is None:
+            active = overlap
+        else:
+            parents = jnp.repeat(active, fanout, axis=1)[:, : overlap.shape[1]]
+            active = jnp.logical_and(parents, overlap)
+    return active
+
+
+_next_pow2 = T.next_pow2
+
+
+def run_fused_visit(
+    data_dev: jax.Array,
+    query_ids: np.ndarray,
+    block_ids: np.ndarray,
+    batch: T.QueryBatch,
+    tile_n: int,
+) -> np.ndarray:
+    """One fused refinement launch over a flattened (query, block) visit list.
+
+    Shared head of every batched two-phase path (tree and VA-file): pads the
+    visit list to a pow2 bucket (padding rows: query 0, block -1, dropped
+    from the output) and the bounds' query axis likewise, then returns the
+    (V, tile_n) int8 masks for the real visits only.
+    """
+    n_visit = _next_pow2(query_ids.size)
+    qids_p = np.zeros((n_visit,), np.int32)
+    bids_p = np.full((n_visit,), -1, np.int32)
+    qids_p[: query_ids.size] = query_ids
+    bids_p[: block_ids.size] = block_ids
+    lo_d, up_d = batch.bounds_columnar(data_dev.shape[0], _next_pow2(len(batch)))
+    masks = ops.multi_range_scan_visit(
+        data_dev, jnp.asarray(qids_p), jnp.asarray(bids_p),
+        jnp.asarray(lo_d, dtype=data_dev.dtype),
+        jnp.asarray(up_d, dtype=data_dev.dtype),
+        tile_n=tile_n,
+    )
+    return np.asarray(masks)[: query_ids.size]
+
+
+def scatter_visit_results(
+    masks: np.ndarray,
+    query_ids: np.ndarray,
+    block_ids: np.ndarray,
+    n_queries: int,
+    tile_n: int,
+    n: int,
+    perm: np.ndarray | None = None,
+) -> list[np.ndarray]:
+    """Turn fused (V, tile_n) visit masks back into per-query sorted id arrays.
+
+    Shared tail of every batched two-phase path (tree and VA-file): each visit
+    row holds the match mask of one (query, block) pair; positions map through
+    ``perm`` (when the structure permuted objects) and object padding drops.
+    """
+    results: list[np.ndarray] = [np.empty((0,), np.int64) for _ in range(n_queries)]
+    offsets = np.arange(tile_n)
+    for k in range(n_queries):
+        rows = np.nonzero(query_ids == k)[0]
+        if rows.size == 0:
+            continue
+        pos = block_ids[rows][:, None] * tile_n + offsets[None, :]
+        pos = pos[masks[rows] > 0]
+        pos = pos[pos < n]
+        if perm is not None:
+            pos = perm[pos]
+        results[k] = np.sort(pos).astype(np.int64)
+    return results
 
 
 @dataclasses.dataclass
@@ -148,6 +238,31 @@ class BlockedIndex:
         pos = pos[masks > 0]
         pos = pos[pos < self.n]  # drop object padding
         return np.sort(self.perm[pos]).astype(np.int64)
+
+    def query_batch(self, batch: T.QueryBatch) -> list[np.ndarray]:
+        """Batched two-phase query: one prune jit + one fused visit launch.
+
+        Phase 1 prunes all Q queries' hierarchies in a single vectorized call;
+        phase 2 flattens the surviving (query, block) pairs into one
+        ``multi_range_scan_visit`` launch, so the per-query dispatch and
+        host-sync taxes are paid once per batch.
+        """
+        q_n = len(batch)
+        q_pad = _next_pow2(q_n)  # pow2 query bucket bounds jit retraces
+        qlo, qhi = batch.bounds_columnar(self.m, q_pad)
+        leaf_mask = np.asarray(prune_hierarchy_batch(
+            self.levels_lo, self.levels_hi,
+            jnp.asarray(qlo), jnp.asarray(qhi), self.fanout,
+        ))[:q_n]  # (Q, n_leaves); padding queries are match-all -> dropped
+        qids, bids = np.nonzero(leaf_mask)
+        self.last_visited_blocks = int(qids.size)
+        if qids.size == 0:
+            return [np.empty((0,), np.int64) for _ in range(q_n)]
+        masks = run_fused_visit(self.data_dev, qids, bids, batch, self.tile_n)
+        return scatter_visit_results(
+            masks, qids.astype(np.int32), bids.astype(np.int32),
+            q_n, self.tile_n, self.n, self.perm,
+        )
 
 
 def finish_build(

@@ -24,11 +24,36 @@ from repro.kernels import ops
 from repro.kernels import range_scan as _rs
 
 
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` across JAX versions.
+
+    Newer JAX exposes ``jax.shard_map`` (with ``check_vma``); this tree's
+    pinned version only has ``jax.experimental.shard_map.shard_map`` (with
+    ``check_rep``). Both flags are disabled for the same reason: pallas_call
+    outputs carry no replication/vma metadata.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def make_data_mesh(n_devices: int | None = None) -> Mesh:
-    """1-D mesh over all (or the first k) local devices: axis 'data'."""
+    """1-D mesh over all (or the first k) local devices: axis 'data'.
+
+    Builds ``jax.sharding.Mesh`` directly from a device ndarray — the
+    ``jax.make_mesh(..., devices=list)`` path is not portable across the JAX
+    versions this tree supports.
+    """
     devs = jax.devices()
     k = n_devices or len(devs)
-    return jax.make_mesh((k,), ("data",), devices=devs[:k])
+    return Mesh(np.asarray(devs[:k]), ("data",))
 
 
 def shard_columnar(mesh: Mesh, padded_cols: np.ndarray, tile_n: int = 1024) -> jax.Array:
@@ -65,12 +90,11 @@ def distributed_mask(
         return _rs.range_scan_tiles(data_local, lo, up, tile_n=tile_n,
                                     interpret=interpret)
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         local_scan,
         mesh=mesh,
         in_specs=(P(None, "data"), P(), P()),
         out_specs=P("data"),
-        check_vma=False,  # pallas_call outputs carry no vma metadata
     )
     return fn(data_sharded, qlo, qhi)
 
@@ -99,12 +123,11 @@ def distributed_count(
                                         interpret=interpret)
         return jax.lax.psum(mask.astype(jnp.int32).sum(), "data")
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         local_count,
         mesh=mesh,
         in_specs=(P(None, "data"), P(), P()),
         out_specs=P(),
-        check_vma=False,
     )
     return fn(data_sharded, qlo, qhi)
 

@@ -5,12 +5,20 @@ available; kd-tree / R*-tree / VA-file optional), and answers range queries
 either with an explicitly chosen method or through the planner ("auto").
 This is the paper's experimental matrix (§7.1.3) as a composable component —
 and the interface the framework's data pipeline uses for sample selection.
+
+Batched execution: ``query_batch`` takes a whole stream of queries at once —
+the inter-query-parallelism counterpart of the paper's intra-query parallel
+scans (§5). Queries bucket by planner-chosen access path (amortized costs),
+each bucket executes through one fused multi-query launch
+(``kernels.multi_scan``), and results come back per query, identical to the
+single-query path. ``serve.mdrq_server`` wraps this into a throughput-
+oriented front end.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
@@ -30,6 +38,20 @@ class QueryStats:
     seconds: float
     n_results: int
     est_selectivity: float
+
+
+@dataclasses.dataclass
+class BatchStats:
+    """Aggregate statistics of one ``query_batch`` execution."""
+
+    n_queries: int
+    seconds: float
+    method_counts: dict[str, int]
+    n_results: int
+
+    @property
+    def qps(self) -> float:
+        return self.n_queries / self.seconds if self.seconds > 0 else float("inf")
 
 
 class MDRQEngine:
@@ -60,6 +82,7 @@ class MDRQEngine:
             available=tuple(available),
         )
         self.last_stats: Optional[QueryStats] = None
+        self.last_batch_stats: Optional[BatchStats] = None
 
     def memory_report(self) -> dict[str, int]:
         """Bytes of auxiliary structures per method (paper §7.2 comparison)."""
@@ -87,6 +110,72 @@ class MDRQEngine:
         self.last_stats = QueryStats(method=method, seconds=dt,
                                      n_results=int(ids.size), est_selectivity=est)
         return ids
+
+    def query_batch(
+        self,
+        queries: Union[T.QueryBatch, Sequence[T.RangeQuery]],
+        method: str = "auto",
+    ) -> list[np.ndarray]:
+        """Execute a batch of queries -> per-query sorted id arrays.
+
+        Queries are bucketed by access path (the planner's choice under
+        whole-batch cost amortization when ``method="auto"``, or the explicit
+        method for all) and each bucket runs through a single fused
+        multi-query launch. Results are positionally aligned with the input
+        and identical to per-query ``query`` calls; aggregate ``BatchStats``
+        land in ``last_batch_stats``.
+        """
+        if isinstance(queries, T.QueryBatch):
+            batch = queries
+        else:
+            queries = list(queries)
+            batch = T.QueryBatch.from_queries(queries) if queries else None
+        if batch is None or len(batch) == 0:
+            self.last_batch_stats = BatchStats(0, 0.0, {}, 0)
+            return []
+        if batch.m != self.dataset.m:
+            raise ValueError(f"batch dims {batch.m} != dataset dims {self.dataset.m}")
+        t0 = time.perf_counter()
+        if method == "auto":
+            plans = self.planner.explain_batch(batch.queries)
+            methods = [p.method for p in plans]
+        elif method in ALL_METHODS:
+            methods = [method] * len(batch)
+        else:
+            raise ValueError(f"unknown method {method!r}; options: {ALL_METHODS} or 'auto'")
+
+        buckets: dict[str, list[int]] = {}
+        for k, meth in enumerate(methods):
+            buckets.setdefault(meth, []).append(k)
+
+        results: list[Optional[np.ndarray]] = [None] * len(batch)
+        for meth, idxs in buckets.items():
+            sub = T.QueryBatch(batch.lower[idxs], batch.upper[idxs])
+            for k, ids in zip(idxs, self._dispatch_batch(sub, meth)):
+                results[k] = ids
+        dt = time.perf_counter() - t0
+        self.last_batch_stats = BatchStats(
+            n_queries=len(batch),
+            seconds=dt,
+            method_counts={m: len(ix) for m, ix in buckets.items()},
+            n_results=int(sum(r.size for r in results)),
+        )
+        return results
+
+    def _dispatch_batch(self, batch: T.QueryBatch, method: str) -> list[np.ndarray]:
+        if method == "scan":
+            return self.columnar.query_batch(batch)
+        if method == "scan_vertical":
+            return self.columnar.query_batch(batch, partial=True)
+        if method == "kdtree" and self.kdtree is not None:
+            return self.kdtree.query_batch(batch)
+        if method == "rstar" and self.rstar is not None:
+            return self.rstar.query_batch(batch)
+        if method == "vafile" and self.vafile is not None:
+            return self.vafile.query_batch(batch)
+        # rowscan (and unbuilt structures) fall back to the per-query path,
+        # which raises the same errors the single-query API does.
+        return [self._dispatch(batch[k], method) for k in range(len(batch))]
 
     def _dispatch(self, q: T.RangeQuery, method: str) -> np.ndarray:
         if method == "scan":

@@ -27,6 +27,14 @@ them the model reproduces the paper's structure: scans always win at small n
 (sync floor dominates, Fig. 7), indexes only win at high selectivity
 (Fig. 6), and the break-even lands near 1% at the paper's 1M-object scale.
 ``calibrate()`` fits the machine constants from measured runs.
+
+Batched execution: every cost accepts a ``batch`` size — the number of
+queries fused into one launch (``MDRQEngine.query_batch``). Fixed taxes
+(dispatch, host sync) divide by the batch, and the fused scans' streamed
+bytes amortize down to a VPU compute floor (``sec_per_cmp``). The two effects
+pull the scan-vs-index break-even in *opposite* directions, and
+``break_even_selectivity(batch_size=...)`` reports the net — a result the
+paper's single-query analysis cannot express.
 """
 from __future__ import annotations
 
@@ -99,9 +107,12 @@ class CostModel:
     dispatch_overhead: float = 2e-6
     host_sync_overhead: float = 20e-6  # device->host->device visit-list turn
     visit_bw_discount: float = 0.6     # scattered tile DMA vs streaming scan
+    sec_per_cmp: float = 2.5e-13       # VPU compare+AND per element (~4e12/s)
 
-    def _bytes_cost(self, nbytes: float, dispatches: float = 1.0) -> float:
-        return nbytes * self.sec_per_byte + dispatches * self.dispatch_overhead
+    def _bytes_cost(self, nbytes: float, dispatches: float = 1.0,
+                    batch: int = 1) -> float:
+        return (nbytes * self.sec_per_byte
+                + dispatches * self.dispatch_overhead / max(batch, 1))
 
     def leaf_side(self) -> float:
         return (self.tile_n / max(self.n, 1)) ** (1.0 / max(self.m, 1))
@@ -121,27 +132,50 @@ class CostModel:
         return f
 
     # -- per-path costs ----------------------------------------------------
-    def cost_scan(self, q: T.RangeQuery) -> float:
-        return self._bytes_cost(self.n * self.m * self.bytes_per_val)
+    # Every cost is *per query*; ``batch`` is the number of queries fused into
+    # the same launch. Batched execution changes the cost structure two ways:
+    # fixed taxes (dispatch, host sync) divide by the batch size, and the
+    # fused scans re-use each HBM data tile for all queries of the batch, so
+    # streamed bytes also divide by the batch — down to the VPU compute floor
+    # (``sec_per_cmp``), at which point the fused scan is compute-bound.
+    def cost_scan(self, q: T.RangeQuery, batch: int = 1) -> float:
+        elems = self.n * self.m
+        stream = elems * self.bytes_per_val * self.sec_per_byte / max(batch, 1)
+        return max(stream, elems * self.sec_per_cmp) \
+            + self.dispatch_overhead / max(batch, 1)
 
-    def cost_scan_vertical(self, q: T.RangeQuery) -> float:
+    def cost_scan_vertical(self, q: T.RangeQuery, batch: int = 1) -> float:
         mq = max(q.n_queried_dims, 1)
-        return self._bytes_cost(self.n * mq * self.bytes_per_val)
+        elems = self.n * mq
+        stream = elems * self.bytes_per_val * self.sec_per_byte / max(batch, 1)
+        return max(stream, elems * self.sec_per_cmp) \
+            + self.dispatch_overhead / max(batch, 1)
 
-    def cost_tree(self, q: T.RangeQuery, sel: float) -> float:
+    def cost_tree(self, q: T.RangeQuery, sel: float, batch: int = 1) -> float:
         n_leaves = -(-self.n // self.tile_n)
-        prune = 2 * n_leaves * self.m * self.bytes_per_val  # MBR lo+hi
+        # Batched prune reads the MBR hierarchy once per batch.
+        prune = 2 * n_leaves * self.m * self.bytes_per_val / max(batch, 1)
         f = self.est_leaf_frac(q, sel)
+        # Refinement visits are per query (each query has its own leaf list).
         refine = f * self.n * self.m * self.bytes_per_val / self.visit_bw_discount
-        return self._bytes_cost(prune + refine, dispatches=2.0) + self.host_sync_overhead
+        return self._bytes_cost(prune + refine, dispatches=2.0, batch=batch) \
+            + self.host_sync_overhead / max(batch, 1)
 
-    def cost_vafile(self, q: T.RangeQuery, hist: Histograms) -> float:
+    def cost_vafile(self, q: T.RangeQuery, hist: Histograms, batch: int = 1) -> float:
         words = -(-self.m // 16)
+        # The packed approximation filter is still a per-query launch
+        # (batching it is an open item), so neither its bytes nor its
+        # candidate-mask readback — half of the sync turn — amortize; only
+        # the fused refinement's dispatch and visit-mask readback divide by
+        # the batch. The halves sum to one full turn at batch=1.
         approx = self.n * words * 4
         cand = self.est_va_candidate_frac(q, hist)
         blk_frac = 1.0 - (1.0 - min(cand, 1.0)) ** self.tile_n
         refine = blk_frac * self.n * self.m * self.bytes_per_val / self.visit_bw_discount
-        return self._bytes_cost(approx + refine, dispatches=2.0) + self.host_sync_overhead
+        return self._bytes_cost(approx + refine) \
+            + self.dispatch_overhead / max(batch, 1) \
+            + self.host_sync_overhead * 0.5 \
+            + self.host_sync_overhead * 0.5 / max(batch, 1)
 
 
 @dataclasses.dataclass
@@ -160,36 +194,56 @@ class Planner:
         self.model = model
         self.available = available
 
-    def explain(self, q: T.RangeQuery) -> Plan:
+    def explain(self, q: T.RangeQuery, batch_size: int = 1) -> Plan:
+        """Rank access paths for q; ``batch_size`` amortizes the fixed taxes
+        (and fused-scan bytes) over a batch of concurrently executed queries."""
         sel = self.hist.selectivity(q)
         costs: dict[str, float] = {}
         if "scan" in self.available:
-            costs["scan"] = self.model.cost_scan(q)
+            costs["scan"] = self.model.cost_scan(q, batch=batch_size)
         if "scan_vertical" in self.available and not q.is_complete_match:
-            costs["scan_vertical"] = self.model.cost_scan_vertical(q)
+            costs["scan_vertical"] = self.model.cost_scan_vertical(q, batch=batch_size)
         for tree in ("kdtree", "rstar"):
             if tree in self.available:
-                costs[tree] = self.model.cost_tree(q, sel)
+                costs[tree] = self.model.cost_tree(q, sel, batch=batch_size)
         if "vafile" in self.available:
-            costs["vafile"] = self.model.cost_vafile(q, self.hist)
+            costs["vafile"] = self.model.cost_vafile(q, self.hist, batch=batch_size)
         method = min(costs, key=costs.get)
         return Plan(method=method, est_selectivity=sel, costs=costs)
 
-    def choose(self, q: T.RangeQuery) -> str:
-        return self.explain(q).method
+    def explain_batch(self, queries) -> list[Plan]:
+        """Per-query plans under whole-batch amortization.
 
-    def break_even_selectivity(self, m_q: Optional[int] = None) -> float:
+        The amortization uses the total batch size for every query — a
+        deliberate simplification (the true per-bucket size is only known
+        after bucketing, which depends on these very plans).
+        """
+        queries = list(queries)
+        return [self.explain(q, batch_size=len(queries)) for q in queries]
+
+    def choose(self, q: T.RangeQuery, batch_size: int = 1) -> str:
+        return self.explain(q, batch_size=batch_size).method
+
+    def break_even_selectivity(self, m_q: Optional[int] = None,
+                               batch_size: int = 1) -> float:
         """Selectivity where the tree index stops beating the full scan.
 
         Bisects the cost model over complete-match queries — reproduces the
-        paper's ~1% headline number for paper-like configurations.
+        paper's ~1% headline number for paper-like configurations. With
+        ``batch_size`` > 1 the break-even reflects batched execution: the
+        index's host-sync tax amortizes away (helping indexes at small n),
+        but the fused scan's byte amortization pushes the scan toward its
+        compute floor (helping scans at large batches) — the net shift is a
+        machine-and-batch-size-dependent result the paper's single-query
+        analysis (§8) cannot see.
         """
         mq = m_q or self.model.m
         lo_s, hi_s = 1e-8, 1.0
 
         def tree_wins(sel: float) -> bool:
             q = _synthetic_query(self.model.m, mq, sel)
-            return self.model.cost_tree(q, sel) < self.model.cost_scan(q)
+            return (self.model.cost_tree(q, sel, batch=batch_size)
+                    < self.model.cost_scan(q, batch=batch_size))
 
         if not tree_wins(lo_s):
             return 0.0

@@ -12,6 +12,11 @@ Three scan flavors, mirroring the paper's contestants:
 
 The paper's multi-threading dimension (horizontal partitioning over t threads)
 maps to sharding over devices and lives in ``core.distributed``.
+
+Batched execution: ``mask_batch`` / ``mask_batch_partial`` evaluate a whole
+``QueryBatch`` through the fused multi-query kernels (``kernels.multi_scan``)
+— one launch per batch instead of one per query, with the query axis padded
+to a pow2 bucket so arbitrary batch sizes hit a bounded set of jit traces.
 """
 from __future__ import annotations
 
@@ -60,6 +65,36 @@ class ColumnarScan:
 
     def query_partial(self, q: T.RangeQuery) -> np.ndarray:
         return np.nonzero(self.mask_partial(q))[0].astype(np.int64)
+
+    # -- batched execution (fused multi-query kernels) ---------------------
+    # The query axis pads to a pow2 bucket (match-all padding columns, rows
+    # dropped here) so arbitrary batch sizes hit a bounded set of jit traces.
+    def mask_batch(self, batch: T.QueryBatch) -> np.ndarray:
+        """(Q, n) bool match masks from one fused full-scan launch."""
+        q_pad = T.next_pow2(len(batch))
+        lo, up = batch.bounds_columnar(self.data_dev.shape[0], q_pad)
+        out = ops.multi_range_scan(
+            self.data_dev, jnp.asarray(lo, dtype=self.data_dev.dtype),
+            jnp.asarray(up, dtype=self.data_dev.dtype), tile_n=self.tile_n,
+        )
+        return np.asarray(out)[: len(batch), : self.n] > 0
+
+    def mask_batch_partial(self, batch: T.QueryBatch) -> np.ndarray:
+        """(Q, n) bool masks touching only each query's constrained dims."""
+        q_pad = T.next_pow2(len(batch))
+        dim_ids = batch.padded_dim_ids(q_pad)
+        lo, up = batch.bounds_columnar(self.data_dev.shape[0], q_pad)
+        out = ops.multi_range_scan_vertical(
+            self.data_dev, jnp.asarray(dim_ids),
+            jnp.asarray(lo, dtype=self.data_dev.dtype),
+            jnp.asarray(up, dtype=self.data_dev.dtype), tile_n=self.tile_n,
+        )
+        return np.asarray(out)[: len(batch), : self.n] > 0
+
+    def query_batch(self, batch: T.QueryBatch, partial: bool = False
+                    ) -> list[np.ndarray]:
+        masks = self.mask_batch_partial(batch) if partial else self.mask_batch(batch)
+        return [np.nonzero(masks[k])[0].astype(np.int64) for k in range(len(batch))]
 
 
 def build_columnar_scan(dataset: T.Dataset, tile_n: int = 1024) -> ColumnarScan:

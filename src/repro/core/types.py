@@ -80,6 +80,94 @@ class RangeQuery:
         return RangeQuery(self.lower[order], self.upper[order])
 
 
+@dataclasses.dataclass(frozen=True)
+class QueryBatch:
+    """An ordered batch of range queries over the same m-dim space.
+
+    Batched execution: analytical workloads are streams of queries, and the
+    fused multi-query kernels (``kernels.multi_scan``) evaluate a whole batch
+    per launch. ``QueryBatch`` is the host-side carrier: bounds are stacked
+    (Q, m) so the kernels' query-minor (m_pad, Q) layout and the per-query
+    constrained-dim lists derive without touching each query again.
+    """
+
+    lower: np.ndarray  # (Q, m) float32
+    upper: np.ndarray  # (Q, m) float32
+
+    def __post_init__(self):
+        lo = np.asarray(self.lower, dtype=np.float32)
+        up = np.asarray(self.upper, dtype=np.float32)
+        if lo.shape != up.shape or lo.ndim != 2:
+            raise ValueError(f"bad batch bounds: {lo.shape} vs {up.shape}")
+        object.__setattr__(self, "lower", lo)
+        object.__setattr__(self, "upper", up)
+
+    @staticmethod
+    def from_queries(queries: Sequence["RangeQuery"]) -> "QueryBatch":
+        if not queries:
+            raise ValueError("empty query batch")
+        m = queries[0].m
+        for q in queries:
+            if q.m != m:
+                raise ValueError(f"mixed dims in batch: {q.m} != {m}")
+        return QueryBatch(np.stack([q.lower for q in queries]),
+                          np.stack([q.upper for q in queries]))
+
+    def __len__(self) -> int:
+        return self.lower.shape[0]
+
+    def __getitem__(self, k: int) -> "RangeQuery":
+        return RangeQuery(self.lower[k], self.upper[k])
+
+    @property
+    def m(self) -> int:
+        return self.lower.shape[1]
+
+    @property
+    def queries(self) -> list["RangeQuery"]:
+        return [self[k] for k in range(len(self))]
+
+    @property
+    def dims_mask(self) -> np.ndarray:
+        """(Q, m) bool — True where a dimension is actually constrained."""
+        return ~(np.isneginf(self.lower) & np.isposinf(self.upper))
+
+    def bounds_columnar(self, m_pad: int, q_pad: int | None = None
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """Query-minor (m_pad, q_pad or Q) finite bounds for the fused kernels.
+
+        Padding dims (and unconstrained dims) carry the dtype extrema, i.e.
+        match-all against any finite value; padding *queries* (columns beyond
+        Q, used to round the batch to a pow2 jit bucket) are match-all too —
+        callers drop their output rows.
+        """
+        q_n = q_pad or len(self)
+        lo = np.full((m_pad, q_n), NEG_INF, np.float32)
+        up = np.full((m_pad, q_n), POS_INF, np.float32)
+        lo[: self.m, : len(self)] = self.lower.T
+        up[: self.m, : len(self)] = self.upper.T
+        return finite_query_bounds(lo, up)
+
+    def padded_dim_ids(self, q_pad: int | None = None) -> np.ndarray:
+        """(q_pad or Q, D_max) int32 constrained-dim ids for the batched
+        vertical scan.
+
+        Shorter rows pad by repeating the query's own last constrained dim
+        (AND is idempotent); a fully unconstrained query — and any padding
+        query row — uses dim 0, whose bounds column is match-all. D_max
+        rounds to a pow2 to bound jit retraces.
+        """
+        mask = self.dims_mask
+        d_max = next_pow2(max(1, int(mask.sum(axis=1).max(initial=0))))
+        ids = np.zeros((q_pad or len(self), d_max), np.int32)
+        for k in range(len(self)):
+            d = np.nonzero(mask[k])[0].astype(np.int32)
+            if d.size == 0:
+                d = np.zeros((1,), np.int32)
+            ids[k] = np.pad(d, (0, d_max - d.size), mode="edge")
+        return ids
+
+
 @dataclasses.dataclass
 class Dataset:
     """A columnar in-memory dataset: ``cols[j, i]`` = attribute j of object i.
@@ -136,6 +224,11 @@ def match_ids_np(cols: np.ndarray, q: RangeQuery) -> np.ndarray:
 def mask_to_ids(mask) -> np.ndarray:
     """Device/host mask -> sorted id array (host-side, dynamic shape)."""
     return np.nonzero(np.asarray(mask))[0].astype(np.int64)
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (pow2 buckets bound jit retraces)."""
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
 
 
 def pad_axis(x: np.ndarray, axis: int, multiple: int, value) -> np.ndarray:

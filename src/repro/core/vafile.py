@@ -32,8 +32,7 @@ from repro.kernels.va_filter import pack_codes, DIMS_PER_WORD
 CELLS = 4  # 2 bits per dimension (paper §2.2.3)
 
 
-def _next_pow2(x: int) -> int:
-    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+_next_pow2 = T.next_pow2
 
 
 @dataclasses.dataclass
@@ -68,21 +67,7 @@ class VAFile:
 
     def query(self, q: T.RangeQuery) -> np.ndarray:
         """Two-phase query -> sorted matching object ids."""
-        cell_lo, cell_hi = self.query_cells(q)
-        m_s = -(-self.m // 8) * 8
-        qlo = np.zeros((m_s, 1), np.int32)
-        qhi = np.full((m_s, 1), CELLS - 1, np.int32)
-        qlo[: self.m, 0] = cell_lo
-        qhi[: self.m, 0] = cell_hi
-        cand = ops.va_filter(
-            self.packed_dev, jnp.asarray(qlo), jnp.asarray(qhi), self.m,
-            tile_n=self.tile_n,
-        )
-        cand_np = np.asarray(cand) > 0
-        self.last_candidate_frac = float(cand_np[: self.n].mean())
-        n_blocks = self.data_dev.shape[1] // self.tile_n
-        block_any = cand_np[: n_blocks * self.tile_n].reshape(n_blocks, self.tile_n).any(axis=1)
-        survivors = np.nonzero(block_any)[0].astype(np.int32)
+        survivors = self._candidate_blocks(q)
         self.last_visited_blocks = int(survivors.size)
         if survivors.size == 0:
             return np.empty((0,), np.int64)
@@ -97,6 +82,52 @@ class VAFile:
         pos = survivors[:, None] * self.tile_n + np.arange(self.tile_n)[None, :]
         pos = pos[masks > 0]
         return np.sort(pos[pos < self.n]).astype(np.int64)
+
+    def _candidate_blocks(self, q: T.RangeQuery) -> np.ndarray:
+        """Phase 1 for one query: block ids containing >= 1 VA candidate."""
+        cell_lo, cell_hi = self.query_cells(q)
+        m_s = -(-self.m // 8) * 8
+        qlo = np.zeros((m_s, 1), np.int32)
+        qhi = np.full((m_s, 1), CELLS - 1, np.int32)
+        qlo[: self.m, 0] = cell_lo
+        qhi[: self.m, 0] = cell_hi
+        cand = np.asarray(ops.va_filter(
+            self.packed_dev, jnp.asarray(qlo), jnp.asarray(qhi), self.m,
+            tile_n=self.tile_n,
+        )) > 0
+        self.last_candidate_frac = float(cand[: self.n].mean())
+        n_blocks = self.data_dev.shape[1] // self.tile_n
+        block_any = cand[: n_blocks * self.tile_n].reshape(
+            n_blocks, self.tile_n).any(axis=1)
+        return np.nonzero(block_any)[0].astype(np.int32)
+
+    def query_batch(self, batch: T.QueryBatch) -> list[np.ndarray]:
+        """Batched two-phase query: per-query approximation filters feed one
+        fused exact-refinement launch.
+
+        Phase 1 stays per-query (the packed filter kernel is single-query —
+        batching it is an open item); phase 2 flattens every surviving
+        (query, block) pair into a single ``multi_range_scan_visit`` call, so
+        the refinement dispatch + host sync amortize over the batch.
+        """
+        from repro.core.blockindex import run_fused_visit, scatter_visit_results
+
+        q_n = len(batch)
+        qids_l: list[np.ndarray] = []
+        bids_l: list[np.ndarray] = []
+        for k in range(q_n):
+            blocks = self._candidate_blocks(batch[k])
+            qids_l.append(np.full((blocks.size,), k, np.int32))
+            bids_l.append(blocks)
+        qids = np.concatenate(qids_l) if qids_l else np.empty((0,), np.int32)
+        bids = np.concatenate(bids_l) if bids_l else np.empty((0,), np.int32)
+        self.last_visited_blocks = int(qids.size)
+        if qids.size == 0:
+            return [np.empty((0,), np.int64) for _ in range(q_n)]
+        masks = run_fused_visit(self.data_dev, qids, bids, batch, self.tile_n)
+        return scatter_visit_results(
+            masks, qids, bids, q_n, self.tile_n, self.n, perm=None,
+        )
 
 
 def build_vafile(

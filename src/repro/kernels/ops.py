@@ -4,6 +4,12 @@ Handles layout/padding policy (pad m to sublanes with match-all bounds, n to
 the tile size with +inf sentinel objects that never match), dtype casting of
 the bounds, and interpret-mode selection (interpret=True on CPU so the kernel
 body executes as the oracle-checked reference path; compiled Mosaic on TPU).
+
+Batched execution: the ``multi_range_scan*`` wrappers drive the fused
+multi-query kernels (``kernels.multi_scan``) — (m_pad, Q) query-minor bounds,
+one launch for a whole query batch. On the XLA backend they route to the
+per-dimension-accumulating refs in ``ref.py``, which are also the honest CPU
+throughput proxy for ``benchmarks/bench_throughput.py``.
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import types as T
+from repro.kernels import multi_scan as _ms
 from repro.kernels import range_scan as _rs
 from repro.kernels import ref as _ref
 from repro.kernels import va_filter as _va
@@ -125,6 +132,78 @@ def range_scan_vertical(
         interpret = default_interpret()
     return _rs.range_scan_vertical(
         data_cm, dim_ids, lower, upper, tile_n=tile_n, interpret=interpret
+    )
+
+
+def batch_bounds_device(batch, m_pad: int, dtype) -> tuple[jax.Array, jax.Array]:
+    """(m_pad, Q) finite device bounds for a QueryBatch (pad rows = match-all)."""
+    if not isinstance(batch, T.QueryBatch):
+        batch = T.QueryBatch.from_queries(list(batch))
+    lo, up = batch.bounds_columnar(m_pad)
+    return jnp.asarray(lo, dtype=dtype), jnp.asarray(up, dtype=dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def multi_range_scan(
+    data_cm: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    tile_n: int = _rs.DEFAULT_TILE_N,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused full scan of a query batch -> (Q, n_pad) int8 masks."""
+    if use_xla():
+        return _ref.multi_scan_ref(data_cm, lower, upper)
+    if interpret is None:
+        interpret = default_interpret()
+    return _ms.multi_scan_tiles(
+        data_cm, lower, upper, tile_n=tile_n, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def multi_range_scan_vertical(
+    data_cm: jax.Array,
+    dim_ids: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    tile_n: int = _rs.DEFAULT_TILE_N,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched partial-match scan -> (Q, n_pad) int8 masks."""
+    if use_xla():
+        return _ref.multi_scan_vertical_ref(data_cm, dim_ids, lower, upper)
+    if interpret is None:
+        interpret = default_interpret()
+    return _ms.multi_scan_vertical(
+        data_cm, dim_ids, lower, upper, tile_n=tile_n, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def multi_range_scan_visit(
+    data_cm: jax.Array,
+    query_ids: jax.Array,
+    block_ids: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    tile_n: int = _rs.DEFAULT_TILE_N,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched two-phase refinement over a (query, block) visit list
+    -> (V, tile_n) int8 per-visit masks."""
+    if use_xla():
+        m_pad, n_pad = data_cm.shape
+        blocks = data_cm.reshape(m_pad, n_pad // tile_n, tile_n).transpose(1, 0, 2)
+        return _ref.multi_scan_blocks_ref(blocks, query_ids, block_ids, lower, upper)
+    if interpret is None:
+        interpret = default_interpret()
+    return _ms.multi_scan_visit(
+        data_cm, query_ids, block_ids, lower, upper, tile_n=tile_n,
+        interpret=interpret,
     )
 
 

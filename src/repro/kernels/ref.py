@@ -48,6 +48,85 @@ def range_scan_blocks_ref(
     return jnp.all(ok, axis=1).astype(jnp.int8)
 
 
+def multi_scan_ref(data_cm: jax.Array, lower: jax.Array, upper: jax.Array) -> jax.Array:
+    """Oracle for the fused multi-query full scan.
+
+    Args:
+      data_cm: (m, n) columnar data.
+      lower, upper: (m, Q) per-query bounds, one column per query.
+
+    Returns:
+      (Q, n) int8 masks — row q is query q's match mask.
+    """
+    # Per-dimension accumulation: one (Q, n) sweep per dim instead of a
+    # (Q, m, n) broadcast — ~9x faster on CPU XLA (no giant intermediate)
+    # and the same merge order the Pallas vertical kernel uses.
+    lo = lower.T.astype(data_cm.dtype)  # (Q, m)
+    up = upper.T.astype(data_cm.dtype)
+    acc = None
+    for j in range(data_cm.shape[0]):
+        row = data_cm[j][None, :]  # (1, n)
+        ok = jnp.logical_and(row >= lo[:, j, None], row <= up[:, j, None])
+        acc = ok if acc is None else jnp.logical_and(acc, ok)
+    return acc.astype(jnp.int8)
+
+
+def multi_scan_vertical_ref(
+    data_cm: jax.Array, dim_ids: jax.Array, lower: jax.Array, upper: jax.Array
+) -> jax.Array:
+    """Oracle for the batched vertical (partial-match) scan.
+
+    Args:
+      data_cm: (m, n) columnar data.
+      dim_ids: (Q, D_max) per-query constrained-dim ids (padding repeats a
+        valid dim of the same query — AND is idempotent).
+      lower, upper: (m, Q) per-query bounds.
+
+    Returns:
+      (Q, n) int8 masks over each query's constrained dims.
+    """
+    lo_t = lower.T.astype(data_cm.dtype)  # (Q, m)
+    up_t = upper.T.astype(data_cm.dtype)
+    acc = None
+    for j in range(dim_ids.shape[1]):
+        d = dim_ids[:, j]            # (Q,)
+        rows = data_cm[d]            # (Q, n) — one constrained dim per query
+        lo = jnp.take_along_axis(lo_t, d[:, None], axis=1)  # (Q, 1)
+        up = jnp.take_along_axis(up_t, d[:, None], axis=1)
+        ok = jnp.logical_and(rows >= lo, rows <= up)
+        acc = ok if acc is None else jnp.logical_and(acc, ok)
+    return acc.astype(jnp.int8)
+
+
+def multi_scan_blocks_ref(
+    data_blocks: jax.Array,
+    query_ids: jax.Array,
+    block_ids: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+) -> jax.Array:
+    """Oracle for the batched block-visit scan.
+
+    Args:
+      data_blocks: (n_blocks, m, tn) columnar leaf blocks.
+      query_ids: (V,) int32 — which query's bounds each visit uses.
+      block_ids: (V,) int32 block ids (negative = padding, clamped to 0).
+      lower, upper: (m, Q) per-query bounds.
+
+    Returns:
+      (V, tn) int8 per-visit masks.
+    """
+    blocks = data_blocks[jnp.maximum(block_ids, 0)]  # (V, m, tn)
+    lo = lower.T[query_ids].astype(data_blocks.dtype)  # (V, m)
+    up = upper.T[query_ids].astype(data_blocks.dtype)
+    acc = None
+    for j in range(data_blocks.shape[1]):
+        ok = jnp.logical_and(blocks[:, j, :] >= lo[:, j, None],
+                             blocks[:, j, :] <= up[:, j, None])
+        acc = ok if acc is None else jnp.logical_and(acc, ok)
+    return acc.astype(jnp.int8)
+
+
 def kv_visit_attention_ref(
     q: jax.Array, k_blocks: jax.Array, v_blocks: jax.Array,
     block_ids: jax.Array, pos: jax.Array,

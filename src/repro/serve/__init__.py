@@ -1,6 +1,9 @@
-"""repro.serve — decode steps, continuous batching, MDRQ admission."""
+"""repro.serve — decode steps, continuous batching, MDRQ admission, and the
+throughput-oriented batched MDRQ query server."""
 from repro.serve.serve_step import make_serve_step, make_prefill, greedy_sample
 from repro.serve.batching import BatchServer, Request, admission_query
+from repro.serve.mdrq_server import MDRQServer, ServerStats, Ticket
 
 __all__ = ["make_serve_step", "make_prefill", "greedy_sample",
-           "BatchServer", "Request", "admission_query"]
+           "BatchServer", "Request", "admission_query",
+           "MDRQServer", "ServerStats", "Ticket"]

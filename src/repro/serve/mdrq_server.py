@@ -1,0 +1,126 @@
+"""Throughput-oriented MDRQ serving front end.
+
+The paper evaluates analytical *streams* of range queries (GMRQB, §6) but its
+engine — like the seed engine here — answers one query per launch, paying the
+full dispatch + host-sync tax each time. ``MDRQServer`` is the batching layer
+on top of ``MDRQEngine.query_batch``: incoming queries accumulate into a
+pending window and flush as one fused batch when either trigger fires —
+
+  * the window reaches ``max_batch`` queries, or
+  * the oldest pending query has waited ``max_wait_s`` (latency bound).
+
+The design is deliberately synchronous (no threads): ``submit`` returns a
+``Ticket`` immediately, deadlines are checked on every submit, and
+``Ticket.result()`` forces a flush of whatever is pending — so behaviour is
+deterministic under test while mirroring the admission loop a real deployment
+would run. Throughput (queries/sec — the primary metric of the multi-query
+literature, e.g. "Learning Multi-dimensional Indexes") accumulates in
+``ServerStats``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import MDRQEngine, RangeQuery
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Handle for one submitted query; ``result()`` blocks (flushes) if needed."""
+
+    _server: "MDRQServer"
+    _result: Optional[np.ndarray] = None
+    _done: bool = False
+
+    def result(self) -> np.ndarray:
+        if not self._done:
+            self._server.flush()
+        assert self._done, "flush did not resolve this ticket"
+        return self._result
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Cumulative serving statistics (the throughput report)."""
+
+    n_queries: int = 0
+    n_batches: int = 0
+    busy_seconds: float = 0.0
+    n_results: int = 0
+    # access-path buckets summed over every flushed batch
+    method_counts: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def qps(self) -> float:
+        return self.n_queries / self.busy_seconds if self.busy_seconds > 0 else 0.0
+
+    @property
+    def mean_batch_size(self) -> float:
+        return self.n_queries / self.n_batches if self.n_batches else 0.0
+
+
+class MDRQServer:
+    """Accumulates queries into batches and drives ``MDRQEngine.query_batch``."""
+
+    def __init__(
+        self,
+        engine: MDRQEngine,
+        max_batch: int = 128,
+        max_wait_s: float = 2e-3,
+        method: str = "auto",
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.method = method
+        self.stats = ServerStats()
+        self._pending: list[tuple[RangeQuery, Ticket]] = []
+        self._oldest_t: float = 0.0
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    def submit(self, q: RangeQuery) -> Ticket:
+        """Enqueue one query; flushes when a batching trigger fires."""
+        ticket = Ticket(self)
+        if not self._pending:
+            self._oldest_t = time.perf_counter()
+        self._pending.append((q, ticket))
+        if (len(self._pending) >= self.max_batch
+                or time.perf_counter() - self._oldest_t >= self.max_wait_s):
+            self.flush()
+        return ticket
+
+    def flush(self) -> int:
+        """Execute everything pending as one batch; returns its size."""
+        if not self._pending:
+            return 0
+        pending, self._pending = self._pending, []
+        queries = [q for q, _ in pending]
+        t0 = time.perf_counter()
+        results = self.engine.query_batch(queries, method=self.method)
+        dt = time.perf_counter() - t0
+        for (_, ticket), ids in zip(pending, results):
+            ticket._result = ids
+            ticket._done = True
+        self.stats.n_queries += len(pending)
+        self.stats.n_batches += 1
+        self.stats.busy_seconds += dt
+        self.stats.n_results += int(sum(r.size for r in results))
+        for m, c in self.engine.last_batch_stats.method_counts.items():
+            self.stats.method_counts[m] = self.stats.method_counts.get(m, 0) + c
+        return len(pending)
+
+    def serve_all(self, queries: list[RangeQuery]) -> list[np.ndarray]:
+        """Drive a whole workload through the batching window; results come
+        back positionally aligned with the input (benchmark convenience)."""
+        tickets = [self.submit(q) for q in queries]
+        self.flush()
+        return [t.result() for t in tickets]

@@ -50,18 +50,19 @@ COMPRESSION_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np, jax, jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.core.distributed import shard_map_compat
     from repro.train import compressed_psum
 
-    mesh = jax.make_mesh((8,), ("data",))
+    mesh = Mesh(np.asarray(jax.devices()), ("data",))
     rng = np.random.default_rng(0)
     g_local = rng.normal(size=(8, 256, 64)).astype(np.float32)
 
     def body(g):
         return compressed_psum({"w": g[0]}, "data")["w"]
 
-    out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                                out_specs=P()))(jnp.asarray(g_local))
+    out = jax.jit(shard_map_compat(body, mesh=mesh, in_specs=P("data"),
+                                   out_specs=P()))(jnp.asarray(g_local))
     exact = g_local.mean(axis=0)
     rel = np.abs(np.asarray(out) - exact).max() / np.abs(exact).max()
     assert rel < 0.02, rel   # int8 quantization error bound

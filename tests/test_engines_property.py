@@ -3,6 +3,8 @@ oracle's result set for arbitrary data distributions and query boxes — the
 system's core invariant (paper §2.1: result = ids of all matching objects)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Dataset, MDRQEngine, RangeQuery, build_columnar_scan,

@@ -1,0 +1,210 @@
+"""Batched (multi-query) execution: fused kernels vs the numpy oracle, and
+``query_batch`` vs the single-query path for every method.
+
+Kernels run in interpret mode on CPU (the oracle-checked reference path), so
+sizes stay small; the XLA refs are checked for exact equality with the
+kernels in the same sweep. Masks are discrete — equality is exact."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (Dataset, MDRQEngine, QueryBatch, RangeQuery,
+                        match_ids_np, match_mask_np)
+from repro.core.planner import CostModel, Planner, Histograms
+from repro.kernels import ops, ref
+
+
+def _mixed_queries(m, cols, rng, n_q):
+    """Alternating complete- and partial-match queries around real records."""
+    out = []
+    for k in range(n_q):
+        if k % 2 == 0:
+            a = cols[:, rng.integers(cols.shape[1])]
+            b = cols[:, rng.integers(cols.shape[1])]
+            out.append(RangeQuery.complete(np.minimum(a, b), np.maximum(a, b)))
+        else:
+            dims = rng.choice(m, size=int(rng.integers(1, m + 1)), replace=False)
+            preds = {int(d): tuple(sorted(rng.random(2).tolist())) for d in dims}
+            out.append(RangeQuery.partial(m, preds))
+    return out
+
+
+# -- (a) kernel variants vs the numpy oracle ---------------------------------
+
+@pytest.mark.parametrize("m,n_q", [(3, 1), (5, 4), (19, 6)])
+def test_multi_scan_tiles_vs_oracle(m, n_q):
+    rng = np.random.default_rng(m * 10 + n_q)
+    cols = rng.random((m, 4096)).astype(np.float32)
+    batch = QueryBatch.from_queries(_mixed_queries(m, cols, rng, n_q))
+    padded, _, n0 = ops.prepare_columnar(cols)
+    data = jnp.asarray(padded)
+    lo, up = batch.bounds_columnar(padded.shape[0])
+    lo, up = jnp.asarray(lo), jnp.asarray(up)
+    out = np.asarray(ops.multi_range_scan(data, lo, up))
+    np.testing.assert_array_equal(out, np.asarray(ref.multi_scan_ref(data, lo, up)))
+    for k in range(n_q):
+        np.testing.assert_array_equal(out[k, :n0].astype(bool),
+                                      match_mask_np(cols, batch[k]))
+
+
+@pytest.mark.parametrize("m,n_q", [(5, 3), (19, 5)])
+def test_multi_scan_vertical_vs_oracle(m, n_q):
+    rng = np.random.default_rng(m + n_q)
+    cols = rng.random((m, 4096)).astype(np.float32)
+    batch = QueryBatch.from_queries(_mixed_queries(m, cols, rng, n_q))
+    padded, _, n0 = ops.prepare_columnar(cols)
+    data = jnp.asarray(padded)
+    dim_ids = jnp.asarray(batch.padded_dim_ids())
+    lo, up = batch.bounds_columnar(padded.shape[0])
+    lo, up = jnp.asarray(lo), jnp.asarray(up)
+    out = np.asarray(ops.multi_range_scan_vertical(data, dim_ids, lo, up))
+    np.testing.assert_array_equal(
+        out, np.asarray(ref.multi_scan_vertical_ref(data, dim_ids, lo, up)))
+    for k in range(n_q):
+        np.testing.assert_array_equal(out[k, :n0].astype(bool),
+                                      match_mask_np(cols, batch[k]))
+
+
+def test_multi_scan_visit_vs_oracle():
+    rng = np.random.default_rng(7)
+    m, tile_n = 5, 1024
+    cols = rng.random((m, 8192)).astype(np.float32)
+    batch = QueryBatch.from_queries(_mixed_queries(m, cols, rng, 3))
+    padded, _, n0 = ops.prepare_columnar(cols, tile_n=tile_n)
+    data = jnp.asarray(padded)
+    n_blocks = padded.shape[1] // tile_n
+    # every (query, block) pair, shuffled, plus padding entries
+    qids = np.repeat(np.arange(3), n_blocks)
+    bids = np.tile(np.arange(n_blocks), 3)
+    order = rng.permutation(qids.size)
+    qids = np.concatenate([qids[order], [0, 0]]).astype(np.int32)
+    bids = np.concatenate([bids[order], [-1, -1]]).astype(np.int32)
+    lo, up = batch.bounds_columnar(padded.shape[0])
+    lo, up = jnp.asarray(lo), jnp.asarray(up)
+    out = np.asarray(ops.multi_range_scan_visit(
+        data, jnp.asarray(qids), jnp.asarray(bids), lo, up, tile_n=tile_n))
+    blocks = data.reshape(data.shape[0], n_blocks, tile_n).transpose(1, 0, 2)
+    np.testing.assert_array_equal(out, np.asarray(ref.multi_scan_blocks_ref(
+        blocks, jnp.asarray(qids), jnp.asarray(bids), lo, up)))
+    for v in range(qids.size - 2):
+        k, b = int(qids[v]), int(bids[v])
+        full = np.zeros((padded.shape[1],), bool)
+        full[:n0] = match_mask_np(cols, batch[k])
+        np.testing.assert_array_equal(out[v].astype(bool),
+                                      full[b * tile_n:(b + 1) * tile_n])
+
+
+# -- (b) query_batch == per-query query for all methods ----------------------
+
+@pytest.mark.parametrize("method", ["scan", "scan_vertical", "kdtree",
+                                    "rstar", "vafile", "auto"])
+def test_query_batch_equals_single(method, uni5):
+    eng = MDRQEngine(uni5, tile_n=512)
+    rng = np.random.default_rng(11)
+    queries = _mixed_queries(uni5.m, uni5.cols, rng, 6)
+    batched = eng.query_batch(queries, method=method)
+    assert eng.last_batch_stats.n_queries == 6
+    assert sum(eng.last_batch_stats.method_counts.values()) == 6
+    for k, q in enumerate(queries):
+        np.testing.assert_array_equal(batched[k], eng.query(q, method))
+        if method != "auto":
+            np.testing.assert_array_equal(batched[k], match_ids_np(uni5.cols, q))
+
+
+def test_query_batch_accepts_querybatch_object(uni5):
+    eng = MDRQEngine(uni5, structures=("scan",), tile_n=512)
+    rng = np.random.default_rng(3)
+    queries = _mixed_queries(uni5.m, uni5.cols, rng, 4)
+    res_list = eng.query_batch(queries, method="scan")
+    res_qb = eng.query_batch(QueryBatch.from_queries(queries), method="scan")
+    for a, b in zip(res_list, res_qb):
+        np.testing.assert_array_equal(a, b)
+
+
+# -- (c) edge cases ----------------------------------------------------------
+
+def test_query_batch_empty_and_single(uni5):
+    eng = MDRQEngine(uni5, structures=("scan",), tile_n=512)
+    assert eng.query_batch([]) == []
+    assert eng.last_batch_stats.n_queries == 0
+    q = RangeQuery.partial(uni5.m, {0: (0.2, 0.4)})
+    res = eng.query_batch([q], method="scan")
+    assert len(res) == 1
+    np.testing.assert_array_equal(res[0], match_ids_np(uni5.cols, q))
+
+
+def test_query_batch_match_all_and_match_none(uni5):
+    eng = MDRQEngine(uni5, structures=("scan",), tile_n=512)
+    q_all = RangeQuery.partial(uni5.m, {})
+    q_none = RangeQuery.partial(uni5.m, {0: (2.0, 3.0)})
+    res = eng.query_batch([q_all, q_none, q_all], method="scan_vertical")
+    assert res[0].size == uni5.n and res[2].size == uni5.n
+    assert res[1].size == 0
+
+
+def test_query_batch_dim_mismatch(uni5):
+    eng = MDRQEngine(uni5, structures=("scan",), tile_n=512)
+    with pytest.raises(ValueError):
+        eng.query_batch([RangeQuery.partial(3, {0: (0.0, 1.0)})])
+
+
+def test_querybatch_rejects_mixed_dims():
+    with pytest.raises(ValueError):
+        QueryBatch.from_queries([RangeQuery.partial(3, {}),
+                                 RangeQuery.partial(4, {})])
+
+
+# -- batched planner costs ---------------------------------------------------
+
+def test_batch_amortizes_fixed_taxes(uni5):
+    hist = Histograms.build(uni5)
+    model = CostModel(n=1_000_000, m=5)
+    q = RangeQuery.complete([0.0] * 5, [0.1] * 5)
+    sel = hist.selectivity(q)
+    assert model.cost_tree(q, sel, batch=128) < model.cost_tree(q, sel)
+    assert model.cost_scan(q, batch=128) < model.cost_scan(q)
+    # batch=1 must equal the legacy single-query cost structure
+    p = Planner(hist, model)
+    assert p.explain(q).costs == p.explain(q, batch_size=1).costs
+
+
+def test_break_even_shifts_with_batch(uni5):
+    """The batched break-even differs from single-query — the subsystem's
+    paper-relevant planning result (net of sync amortization helping indexes
+    and fused-byte amortization helping scans)."""
+    hist = Histograms.build(uni5)
+    p = Planner(hist, CostModel(n=10_000_000, m=5))
+    be1 = p.break_even_selectivity()
+    be128 = p.break_even_selectivity(batch_size=128)
+    assert be1 > 0
+    assert abs(be128 - be1) / be1 > 0.25, (be1, be128)
+
+
+# -- the serving front end ---------------------------------------------------
+
+def test_mdrq_server_batches_and_agrees(uni5):
+    from repro.serve.mdrq_server import MDRQServer
+
+    eng = MDRQEngine(uni5, structures=("scan",), tile_n=512)
+    rng = np.random.default_rng(21)
+    queries = _mixed_queries(uni5.m, uni5.cols, rng, 10)
+    server = MDRQServer(eng, max_batch=4, max_wait_s=float("inf"), method="scan")
+    results = server.serve_all(queries)
+    for q, ids in zip(queries, results):
+        np.testing.assert_array_equal(ids, match_ids_np(uni5.cols, q))
+    # 10 queries at window 4 -> batches of 4, 4, 2
+    assert server.stats.n_batches == 3
+    assert server.stats.n_queries == 10
+    assert server.stats.qps > 0
+
+
+def test_mdrq_server_ticket_forces_flush(uni5):
+    from repro.serve.mdrq_server import MDRQServer
+
+    eng = MDRQEngine(uni5, structures=("scan",), tile_n=512)
+    server = MDRQServer(eng, max_batch=64, max_wait_s=float("inf"))
+    q = RangeQuery.partial(uni5.m, {1: (0.1, 0.3)})
+    ticket = server.submit(q)
+    assert server.n_pending == 1  # window not full, nothing executed yet
+    np.testing.assert_array_equal(ticket.result(), match_ids_np(uni5.cols, q))
+    assert server.n_pending == 0
