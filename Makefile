@@ -1,7 +1,7 @@
 # Developer entry points. The tier-1 gate is exactly what CI runs.
 PYTHONPATH := src
 
-.PHONY: test smoke bench-throughput bench
+.PHONY: test smoke bench-throughput bench-count bench
 
 # Tier-1 verify: the full test suite, fail-fast.
 test:
@@ -14,6 +14,10 @@ smoke:
 # Batched-execution throughput sweep (CPU: XLA proxy; TPU: Mosaic kernels).
 bench-throughput:
 	PYTHONPATH=src python -m benchmarks.run --only throughput
+
+# Count-only result mode sweep (device-side reduction, no host nonzero).
+bench-count:
+	PYTHONPATH=src python -m benchmarks.run --only throughput-count
 
 # Full benchmark matrix (quick sizes).
 bench:

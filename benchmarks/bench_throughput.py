@@ -6,7 +6,17 @@ inter-query analogue of the paper's intra-query scaling figures. Batch 1 is
 the seed engine's per-query regime, so the B{128}/B{1} speedup row is the
 amortization headline. Like every benchmark here, CPU numbers use the XLA
 backend as the honest proxy (see common.py); real kernel numbers are TPU.
+
+``run_count`` (the ``--mode count`` sweep, ``make bench-count``) repeats the
+mixed-workload sweep in count-only result mode: match counts reduce on
+device and the per-query host-side ``nonzero`` never runs, so the count/ids
+qps ratio isolates the result-materialization tax from the kernel work.
 """
+import os
+
+if __name__ == "__main__":  # direct module run: set the backend before any
+    os.environ.setdefault("REPRO_KERNEL_BACKEND", "xla")  # repro import
+
 import numpy as np
 
 from benchmarks.common import emit_row
@@ -17,24 +27,30 @@ from repro.serve.mdrq_server import MDRQServer
 BATCH_SIZES = (1, 8, 32, 128)
 
 
-def _throughput(eng, queries, batch: int, method: str = "auto"):
+def _throughput(eng, queries, batch: int, method: str = "auto",
+                mode: str = "ids"):
     """(qps, whole-workload method_counts) through a fresh serving window."""
     server = MDRQServer(eng, max_batch=batch, max_wait_s=float("inf"),
-                        method=method)
+                        method=method, mode=mode)
     server.serve_all(queries[: 2 * batch])  # warmup (jit + retrace buckets)
     server.stats = type(server.stats)()
     server.serve_all(queries)
     return server.stats.qps, server.stats.method_counts
 
 
-def run(quick: bool = True) -> None:
+def _workload(quick: bool):
     n = 200_000 if quick else 1_000_000
     ds = gmrqb.build(n, seed=0)
     eng = MDRQEngine(ds, structures=("scan", "kdtree", "vafile"))
     n_queries = 128 if quick else 256
+    mixed = [q for _, q in gmrqb.mixed_workload(ds, n_queries, seed=2)]
+    return eng, mixed, n_queries
+
+
+def run(quick: bool = True) -> None:
+    eng, mixed, n_queries = _workload(quick)
 
     # Mixed workload (all 8 templates interleaved) across batch sizes.
-    mixed = [q for _, q in gmrqb.mixed_workload(ds, n_queries, seed=2)]
     base = None
     for b in BATCH_SIZES:
         r, _ = _throughput(eng, mixed, b)
@@ -46,7 +62,7 @@ def run(quick: bool = True) -> None:
     # throughput for each selectivity band.
     rng = np.random.default_rng(3)
     for k in (1, 4, 8):
-        queries = [gmrqb.template(k, rng, ds) for _ in range(n_queries)]
+        queries = [gmrqb.template(k, rng, eng.dataset) for _ in range(n_queries)]
         r, counts = _throughput(eng, queries, BATCH_SIZES[-1])
         emit_row(f"throughput/T{k}/B{BATCH_SIZES[-1]}", 1e6 / r,
                  f"qps={r:.1f};buckets={'+'.join(sorted(counts))}")
@@ -57,3 +73,36 @@ def run(quick: bool = True) -> None:
         rb, _ = _throughput(eng, mixed, BATCH_SIZES[-1], method=meth)
         emit_row(f"throughput/{meth}/B{BATCH_SIZES[-1]}", 1e6 / rb,
                  f"qps={rb:.1f};speedup_vs_B1={rb / r1:.2f}x")
+
+
+def run_count(quick: bool = True) -> None:
+    """Count-only result mode sweep (``--mode count`` / ``make bench-count``)."""
+    eng, mixed, _ = _workload(quick)
+
+    base = None
+    for b in BATCH_SIZES:
+        r, _ = _throughput(eng, mixed, b, mode="count")
+        base = base or r
+        emit_row(f"throughput/count/mixed/B{b}", 1e6 / r,
+                 f"qps={r:.1f};speedup_vs_B1={r / base:.2f}x")
+
+    # Count-vs-ids at the largest batch: the id-materialization tax, per path.
+    for meth in ("scan", "vafile"):
+        r_ids, _ = _throughput(eng, mixed, BATCH_SIZES[-1], method=meth)
+        r_cnt, _ = _throughput(eng, mixed, BATCH_SIZES[-1], method=meth,
+                               mode="count")
+        emit_row(f"throughput/count/{meth}/B{BATCH_SIZES[-1]}", 1e6 / r_cnt,
+                 f"qps={r_cnt:.1f};count_vs_ids={r_cnt / r_ids:.2f}x")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--mode", choices=("ids", "count"), default="ids",
+                    help="result mode to sweep")
+    args = ap.parse_args()
+    from benchmarks.common import CSV_HEADER
+    print(CSV_HEADER, flush=True)
+    (run_count if args.mode == "count" else run)(quick=not args.full)

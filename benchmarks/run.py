@@ -17,6 +17,7 @@ import traceback
 
 from benchmarks.common import CSV_HEADER
 
+# (section name, module[, entry point — defaults to ``run``])
 SECTIONS = [
     ("fig4", "benchmarks.bench_hw_features"),
     ("fig5", "benchmarks.bench_dimensionality"),
@@ -27,6 +28,7 @@ SECTIONS = [
     ("fig10", "benchmarks.bench_gmrqb"),
     ("fig11", "benchmarks.bench_scaling"),
     ("throughput", "benchmarks.bench_throughput"),
+    ("throughput-count", "benchmarks.bench_throughput", "run_count"),
     ("mem", "benchmarks.bench_memory"),
     ("roofline", "benchmarks.bench_rooflines"),
 ]
@@ -41,14 +43,14 @@ def main() -> int:
 
     print(CSV_HEADER, flush=True)
     failures = 0
-    for name, module in SECTIONS:
+    for name, module, *entry in SECTIONS:
         if only and name not in only:
             continue
         t0 = time.time()
         try:
             import importlib
             mod = importlib.import_module(module)
-            mod.run(quick=not args.full)
+            getattr(mod, entry[0] if entry else "run")(quick=not args.full)
             print(f"# section {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
             failures += 1

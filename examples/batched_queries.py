@@ -50,9 +50,19 @@ def main() -> None:
     served = server.serve_all(queries)
     assert all(np.array_equal(a, b) for a, b in zip(singles, served))
 
+    # 4) count-only result mode: match counts reduce on device, the per-query
+    # host-side nonzero never runs (COUNT(*) analytics fast path)
+    eng.query_batch(queries, mode="count")
+    t0 = time.perf_counter()
+    counts = eng.query_batch(queries, mode="count")
+    t_count = time.perf_counter() - t0
+    assert counts == [ids.size for ids in singles]
+
     print(f"\nper-query : {len(queries)/t_single:8.1f} qps")
     print(f"one batch  : {len(queries)/t_batch:8.1f} qps  "
           f"(buckets: {stats.method_counts})")
+    print(f"count mode : {len(queries)/t_count:8.1f} qps  "
+          f"(ints only, {sum(counts)} total matches)")
     print(f"server B=32: {server.stats.qps:8.1f} qps  "
           f"({server.stats.n_batches} batches, "
           f"mean size {server.stats.mean_batch_size:.1f})")

@@ -6,8 +6,8 @@ Public API:
     ``build_rstar``, ``build_vafile``, ``DistributedScan``
   * planning: ``Planner``, ``Histograms``, ``CostModel``
 """
-from repro.core.types import (Dataset, QueryBatch, RangeQuery, match_ids_np,
-                              match_mask_np)
+from repro.core.types import (Dataset, QueryBatch, RangeQuery, RESULT_MODES,
+                              match_ids_np, match_mask_np)
 from repro.core.engine import MDRQEngine, ALL_METHODS, BatchStats
 from repro.core.scan import build_columnar_scan, build_row_scan
 from repro.core.kdtree import build_kdtree
@@ -17,7 +17,8 @@ from repro.core.planner import CostModel, Histograms, Planner
 from repro.core.distributed import DistributedScan, make_data_mesh
 
 __all__ = [
-    "Dataset", "QueryBatch", "RangeQuery", "match_ids_np", "match_mask_np",
+    "Dataset", "QueryBatch", "RangeQuery", "RESULT_MODES", "match_ids_np",
+    "match_mask_np",
     "MDRQEngine", "ALL_METHODS", "BatchStats",
     "build_columnar_scan", "build_row_scan", "build_kdtree", "build_rstar",
     "build_vafile", "CostModel", "Histograms", "Planner",

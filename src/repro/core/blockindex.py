@@ -118,6 +118,41 @@ def prune_hierarchy_batch(
 _next_pow2 = T.next_pow2
 
 
+def _pad_visit_list(
+    query_ids: np.ndarray, block_ids: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pad a flattened (query, block) visit list to a pow2 jit bucket.
+
+    Padding rows carry query 0 / block -1 — the visit kernel clamps negative
+    block ids to 0, so callers must drop (ids mode) or zero out (count mode)
+    the padding rows' output.
+    """
+    n_visit = _next_pow2(query_ids.size)
+    qids_p = np.zeros((n_visit,), np.int32)
+    bids_p = np.full((n_visit,), -1, np.int32)
+    qids_p[: query_ids.size] = query_ids
+    bids_p[: block_ids.size] = block_ids
+    return qids_p, bids_p
+
+
+def _launch_fused_visit(
+    data_dev: jax.Array,
+    qids_p: np.ndarray,
+    bids_p: np.ndarray,
+    batch: T.QueryBatch,
+    tile_n: int,
+) -> jax.Array:
+    """One ``multi_range_scan_visit`` launch over a padded visit list; the
+    (V_pad, tile_n) masks stay on device for the caller to reduce or fetch."""
+    lo_d, up_d = ops.batch_bounds_device(batch, data_dev.shape[0],
+                                         data_dev.dtype,
+                                         q_pad=_next_pow2(len(batch)))
+    return ops.multi_range_scan_visit(
+        data_dev, jnp.asarray(qids_p), jnp.asarray(bids_p), lo_d, up_d,
+        tile_n=tile_n,
+    )
+
+
 def run_fused_visit(
     data_dev: jax.Array,
     query_ids: np.ndarray,
@@ -132,19 +167,34 @@ def run_fused_visit(
     from the output) and the bounds' query axis likewise, then returns the
     (V, tile_n) int8 masks for the real visits only.
     """
-    n_visit = _next_pow2(query_ids.size)
-    qids_p = np.zeros((n_visit,), np.int32)
-    bids_p = np.full((n_visit,), -1, np.int32)
-    qids_p[: query_ids.size] = query_ids
-    bids_p[: block_ids.size] = block_ids
-    lo_d, up_d = batch.bounds_columnar(data_dev.shape[0], _next_pow2(len(batch)))
-    masks = ops.multi_range_scan_visit(
-        data_dev, jnp.asarray(qids_p), jnp.asarray(bids_p),
-        jnp.asarray(lo_d, dtype=data_dev.dtype),
-        jnp.asarray(up_d, dtype=data_dev.dtype),
-        tile_n=tile_n,
+    qids_p, bids_p = _pad_visit_list(query_ids, block_ids)
+    masks = _launch_fused_visit(data_dev, qids_p, bids_p, batch, tile_n)
+    return ops.device_get(masks)[: query_ids.size]
+
+
+def run_fused_visit_counts(
+    data_dev: jax.Array,
+    query_ids: np.ndarray,
+    block_ids: np.ndarray,
+    batch: T.QueryBatch,
+    tile_n: int,
+    n_queries: int,
+) -> np.ndarray:
+    """Count-only fused refinement: one launch, per-query match counts.
+
+    The (V, tile_n) visit masks are reduced to (n_queries,) int counts *on
+    device* (segment-add by query id, padding visits zeroed) — no per-visit
+    mask readback and no host-side ``nonzero``; the only host transfer is the
+    count vector itself.
+    """
+    qids_p, bids_p = _pad_visit_list(query_ids, block_ids)
+    masks = _launch_fused_visit(data_dev, qids_p, bids_p, batch, tile_n)
+    q_bucket = _next_pow2(max(n_queries, 1))  # pow2 bounds jit retraces
+    counts = ops.visit_counts(
+        masks, jnp.asarray(qids_p), jnp.asarray((bids_p >= 0).astype(np.int32)),
+        q_bucket,
     )
-    return np.asarray(masks)[: query_ids.size]
+    return ops.device_get(counts)[:n_queries].astype(np.int64)
 
 
 def scatter_visit_results(
@@ -161,11 +211,16 @@ def scatter_visit_results(
     Shared tail of every batched two-phase path (tree and VA-file): each visit
     row holds the match mask of one (query, block) pair; positions map through
     ``perm`` (when the structure permuted objects) and object padding drops.
+    Visit rows are grouped by query with one argsort + searchsorted pass
+    (O(V log V)) instead of rescanning the whole visit list per query (O(Q·V)).
     """
     results: list[np.ndarray] = [np.empty((0,), np.int64) for _ in range(n_queries)]
     offsets = np.arange(tile_n)
+    order = np.argsort(query_ids, kind="stable")
+    qids_sorted = query_ids[order]
+    bounds = np.searchsorted(qids_sorted, np.arange(n_queries + 1))
     for k in range(n_queries):
-        rows = np.nonzero(query_ids == k)[0]
+        rows = order[bounds[k]: bounds[k + 1]]
         if rows.size == 0:
             continue
         pos = block_ids[rows][:, None] * tile_n + offsets[None, :]
@@ -239,13 +294,33 @@ class BlockedIndex:
         pos = pos[pos < self.n]  # drop object padding
         return np.sort(self.perm[pos]).astype(np.int64)
 
-    def query_batch(self, batch: T.QueryBatch) -> list[np.ndarray]:
+    def count(self, q: T.RangeQuery) -> int:
+        """Count-only query: visit masks are summed on device (no id arrays —
+        counts are permutation-invariant, so ``perm`` never enters)."""
+        leaf_mask = self.query_leaf_mask(q)
+        survivors = np.nonzero(leaf_mask)[0].astype(np.int32)
+        self.last_visited_blocks = int(survivors.size)
+        if survivors.size == 0:
+            return 0
+        n_visit = _next_pow2(survivors.size)
+        ids = np.full((n_visit,), -1, np.int32)
+        ids[: survivors.size] = survivors
+        qlo, qhi = ops.query_bounds_device(q, self.data_dev.shape[0], self.data_dev.dtype)
+        masks = ops.range_scan_visit(self.data_dev, jnp.asarray(ids), qlo, qhi,
+                                     tile_n=self.tile_n)
+        # padding visits (id -1, clamped to block 0) are sliced off on device
+        return int(ops.device_get(jnp.sum(masks[: survivors.size] != 0)))
+
+    def query_batch(self, batch: T.QueryBatch, mode: str = "ids"
+                    ) -> list[np.ndarray] | list[int]:
         """Batched two-phase query: one prune jit + one fused visit launch.
 
         Phase 1 prunes all Q queries' hierarchies in a single vectorized call;
         phase 2 flattens the surviving (query, block) pairs into one
         ``multi_range_scan_visit`` launch, so the per-query dispatch and
-        host-sync taxes are paid once per batch.
+        host-sync taxes are paid once per batch. ``mode="count"`` reduces the
+        visit masks to per-query counts on device instead of materializing id
+        arrays (no host-side ``nonzero`` over result sets).
         """
         q_n = len(batch)
         q_pad = _next_pow2(q_n)  # pow2 query bucket bounds jit retraces
@@ -257,7 +332,15 @@ class BlockedIndex:
         qids, bids = np.nonzero(leaf_mask)
         self.last_visited_blocks = int(qids.size)
         if qids.size == 0:
+            if mode == "count":
+                return [0] * q_n
             return [np.empty((0,), np.int64) for _ in range(q_n)]
+        if mode == "count":
+            counts = run_fused_visit_counts(
+                self.data_dev, qids.astype(np.int32), bids.astype(np.int32),
+                batch, self.tile_n, q_n,
+            )
+            return [int(c) for c in counts]
         masks = run_fused_visit(self.data_dev, qids, bids, batch, self.tile_n)
         return scatter_visit_results(
             masks, qids.astype(np.int32), bids.astype(np.int32),

@@ -38,6 +38,13 @@ def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
             return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       check_vma=False)
         except TypeError:
+            pass
+        try:
+            # intermediate versions export jax.shard_map but still spell the
+            # flag check_rep — it must be disabled just the same
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+        except TypeError:
             return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     from jax.experimental.shard_map import shard_map as _sm
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,

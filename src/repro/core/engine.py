@@ -13,6 +13,11 @@ each bucket executes through one fused multi-query launch
 (``kernels.multi_scan``), and results come back per query, identical to the
 single-query path. ``serve.mdrq_server`` wraps this into a throughput-
 oriented front end.
+
+Result modes: ``mode="ids"`` (default) returns sorted matching id arrays;
+``mode="count"`` returns per-query match counts reduced *on device* — the
+per-query host-side ``nonzero`` that dominates large result sets never runs
+(the COUNT(*) fast path of analytical workloads).
 """
 from __future__ import annotations
 
@@ -30,6 +35,7 @@ from repro.core.vafile import build_vafile
 from repro.core.planner import CostModel, Histograms, Planner
 
 ALL_METHODS = ("scan", "scan_vertical", "rowscan", "kdtree", "rstar", "vafile")
+RESULT_MODES = T.RESULT_MODES
 
 
 @dataclasses.dataclass
@@ -51,7 +57,14 @@ class BatchStats:
 
     @property
     def qps(self) -> float:
-        return self.n_queries / self.seconds if self.seconds > 0 else float("inf")
+        # 0.0 on an empty/zero-time batch (mirrors ServerStats.qps — a rate
+        # with nothing measured is reported as zero, not infinity).
+        return self.n_queries / self.seconds if self.seconds > 0 else 0.0
+
+
+def _n_results(results: Sequence) -> int:
+    """Total matches across per-query results (id arrays or int counts)."""
+    return int(sum(int(r) if np.isscalar(r) else int(r.size) for r in results))
 
 
 class MDRQEngine:
@@ -72,11 +85,13 @@ class MDRQEngine:
         self.rstar = build_rstar(dataset, tile_n=tile_n) if "rstar" in structures else None
         self.vafile = build_vafile(dataset, tile_n=tile_n) if "vafile" in structures else None
         self.hist = Histograms.build(dataset)
+        # Every built structure must be plannable, or "auto" silently never
+        # chooses it (the seed omitted rstar here — a structure that was paid
+        # for at build time but could not win a single query).
         available = ["scan", "scan_vertical"]
-        if self.kdtree is not None:
-            available.append("kdtree")
-        if self.vafile is not None:
-            available.append("vafile")
+        for name in ("kdtree", "rstar", "vafile"):
+            if getattr(self, name) is not None:
+                available.append(name)
         self.planner = Planner(
             self.hist, CostModel(n=dataset.n, m=dataset.m, tile_n=tile_n),
             available=tuple(available),
@@ -95,28 +110,39 @@ class MDRQEngine:
             rep["vafile"] = self.vafile.nbytes_index
         return rep
 
-    def query(self, q: T.RangeQuery, method: str = "auto") -> np.ndarray:
-        """Execute q -> sorted matching ids; records QueryStats."""
+    def query(self, q: T.RangeQuery, method: str = "auto",
+              mode: str = "ids") -> Union[np.ndarray, int]:
+        """Execute q -> sorted matching ids (or an int count with
+        ``mode="count"``); records QueryStats."""
         if q.m != self.dataset.m:
             raise ValueError(f"query dims {q.m} != dataset dims {self.dataset.m}")
+        if mode not in RESULT_MODES:
+            raise ValueError(f"unknown mode {mode!r}; options: {RESULT_MODES}")
         if method == "auto":
             plan = self.planner.explain(q)
             method, est = plan.method, plan.est_selectivity
         else:
             est = self.planner.hist.selectivity(q)
         t0 = time.perf_counter()
-        ids = self._dispatch(q, method)
+        if mode == "count":
+            res: Union[np.ndarray, int] = self._dispatch_count(q, method)
+            n_res = int(res)
+        else:
+            res = self._dispatch(q, method)
+            n_res = int(res.size)
         dt = time.perf_counter() - t0
         self.last_stats = QueryStats(method=method, seconds=dt,
-                                     n_results=int(ids.size), est_selectivity=est)
-        return ids
+                                     n_results=n_res, est_selectivity=est)
+        return res
 
     def query_batch(
         self,
         queries: Union[T.QueryBatch, Sequence[T.RangeQuery]],
         method: str = "auto",
-    ) -> list[np.ndarray]:
-        """Execute a batch of queries -> per-query sorted id arrays.
+        mode: str = "ids",
+    ) -> Union[list[np.ndarray], list[int]]:
+        """Execute a batch of queries -> per-query sorted id arrays (or int
+        counts with ``mode="count"``).
 
         Queries are bucketed by access path (the planner's choice under
         whole-batch cost amortization when ``method="auto"``, or the explicit
@@ -125,6 +151,8 @@ class MDRQEngine:
         and identical to per-query ``query`` calls; aggregate ``BatchStats``
         land in ``last_batch_stats``.
         """
+        if mode not in RESULT_MODES:
+            raise ValueError(f"unknown mode {mode!r}; options: {RESULT_MODES}")
         if isinstance(queries, T.QueryBatch):
             batch = queries
         else:
@@ -148,33 +176,36 @@ class MDRQEngine:
         for k, meth in enumerate(methods):
             buckets.setdefault(meth, []).append(k)
 
-        results: list[Optional[np.ndarray]] = [None] * len(batch)
+        results: list = [None] * len(batch)
         for meth, idxs in buckets.items():
             sub = T.QueryBatch(batch.lower[idxs], batch.upper[idxs])
-            for k, ids in zip(idxs, self._dispatch_batch(sub, meth)):
-                results[k] = ids
+            for k, res in zip(idxs, self._dispatch_batch(sub, meth, mode)):
+                results[k] = res
         dt = time.perf_counter() - t0
         self.last_batch_stats = BatchStats(
             n_queries=len(batch),
             seconds=dt,
             method_counts={m: len(ix) for m, ix in buckets.items()},
-            n_results=int(sum(r.size for r in results)),
+            n_results=_n_results(results),
         )
         return results
 
-    def _dispatch_batch(self, batch: T.QueryBatch, method: str) -> list[np.ndarray]:
+    def _dispatch_batch(self, batch: T.QueryBatch, method: str,
+                        mode: str = "ids") -> list:
         if method == "scan":
-            return self.columnar.query_batch(batch)
+            return self.columnar.query_batch(batch, mode=mode)
         if method == "scan_vertical":
-            return self.columnar.query_batch(batch, partial=True)
+            return self.columnar.query_batch(batch, partial=True, mode=mode)
         if method == "kdtree" and self.kdtree is not None:
-            return self.kdtree.query_batch(batch)
+            return self.kdtree.query_batch(batch, mode=mode)
         if method == "rstar" and self.rstar is not None:
-            return self.rstar.query_batch(batch)
+            return self.rstar.query_batch(batch, mode=mode)
         if method == "vafile" and self.vafile is not None:
-            return self.vafile.query_batch(batch)
+            return self.vafile.query_batch(batch, mode=mode)
         # rowscan (and unbuilt structures) fall back to the per-query path,
         # which raises the same errors the single-query API does.
+        if mode == "count":
+            return [self._dispatch_count(batch[k], method) for k in range(len(batch))]
         return [self._dispatch(batch[k], method) for k in range(len(batch))]
 
     def _dispatch(self, q: T.RangeQuery, method: str) -> np.ndarray:
@@ -198,4 +229,29 @@ class MDRQEngine:
             if self.vafile is None:
                 raise ValueError("vafile not built")
             return self.vafile.query(q)
+        raise ValueError(f"unknown method {method!r}; options: {ALL_METHODS} or 'auto'")
+
+    def _dispatch_count(self, q: T.RangeQuery, method: str) -> int:
+        """Count-only dispatch: every access path sums its match masks on
+        device instead of materializing an id array."""
+        if method == "scan":
+            return self.columnar.count(q)
+        if method == "scan_vertical":
+            return self.columnar.count_partial(q)
+        if method == "rowscan":
+            if self.rowscan is None:
+                raise ValueError("rowscan not built (pass rowscan=True)")
+            return self.rowscan.count(q)
+        if method == "kdtree":
+            if self.kdtree is None:
+                raise ValueError("kdtree not built")
+            return self.kdtree.count(q)
+        if method == "rstar":
+            if self.rstar is None:
+                raise ValueError("rstar not built")
+            return self.rstar.count(q)
+        if method == "vafile":
+            if self.vafile is None:
+                raise ValueError("vafile not built")
+            return self.vafile.count(q)
         raise ValueError(f"unknown method {method!r}; options: {ALL_METHODS} or 'auto'")

@@ -68,30 +68,41 @@ class Histograms:
         return Histograms(edges=edges, counts=counts, n=n)
 
     def dim_selectivity(self, d: int, lb: float, ub: float) -> float:
-        """Estimated fraction of objects with attribute d in [lb, ub]."""
+        """Estimated fraction of objects with attribute d in [lb, ub].
+
+        Any predicate overlapping the observed domain is clamped to at least
+        ``1/n`` — including *point* predicates (``lb == ub``, ubiquitous in
+        GMRQB mixed workloads), whose bin coverage is zero-width and would
+        otherwise estimate 0.0 and mis-rank every access path.
+        """
         if np.isneginf(lb) and np.isposinf(ub):
             return 1.0
+        if ub < lb:
+            return 0.0  # empty range
         e, c = self.edges[d], self.counts[d]
+        if ub < e[0] or lb > e[-1]:
+            return 0.0  # disjoint from the observed domain
         lo = np.clip(lb, e[0], e[-1])
         hi = np.clip(ub, e[0], e[-1])
-        if hi <= lo and not (lb <= e[0] and ub >= e[-1]):
-            # zero-width after clipping: point query or disjoint range
-            if ub < e[0] or lb > e[-1]:
-                return 0.0
         widths = np.diff(e)
         # fraction of each bin covered by [lo, hi]
         cover = np.clip((np.minimum(hi, e[1:]) - np.maximum(lo, e[:-1])) / np.maximum(widths, 1e-30), 0.0, 1.0)
         frac = float((c * cover).sum() / max(self.n, 1))
-        return min(1.0, max(frac, 1.0 / max(self.n, 1) if hi > lo else 0.0))
+        return min(1.0, max(frac, 1.0 / max(self.n, 1)))
 
     def selectivity(self, q: T.RangeQuery) -> float:
-        """Independence-assumption estimate of query selectivity (§2.1)."""
+        """Independence-assumption estimate of query selectivity (§2.1).
+
+        Floored at ``1/n`` unless some dimension is provably disjoint from
+        the domain: an estimate of "at least one match" is the standard
+        planner convention, and it keeps point queries rankable.
+        """
         s = 1.0
         for d in np.nonzero(q.dims_mask)[0]:
             s *= self.dim_selectivity(int(d), float(q.lower[d]), float(q.upper[d]))
             if s == 0.0:
-                break
-        return s
+                return 0.0
+        return max(s, 1.0 / max(self.n, 1))
 
 
 @dataclasses.dataclass
@@ -163,19 +174,22 @@ class CostModel:
 
     def cost_vafile(self, q: T.RangeQuery, hist: Histograms, batch: int = 1) -> float:
         words = -(-self.m // 16)
-        # The packed approximation filter is still a per-query launch
-        # (batching it is an open item), so neither its bytes nor its
-        # candidate-mask readback — half of the sync turn — amortize; only
-        # the fused refinement's dispatch and visit-mask readback divide by
-        # the batch. The halves sum to one full turn at batch=1.
-        approx = self.n * words * 4
+        # Both phases are fused per batch (``multi_va_filter`` +
+        # ``multi_range_scan_visit``): the packed words stream from HBM once
+        # per *batch* — down to the VPU unpack-compare floor — and both sync
+        # halves (the phase-1 survivor-bit readback, now one (Q, n_blocks)
+        # array, and the visit-mask readback) divide by the batch, as do the
+        # two launches' dispatches. At batch=1 this is the single-query
+        # two-phase cost structure.
+        approx_bytes = self.n * words * 4
+        approx = max(approx_bytes * self.sec_per_byte / max(batch, 1),
+                     self.n * self.m * self.sec_per_cmp)
         cand = self.est_va_candidate_frac(q, hist)
         blk_frac = 1.0 - (1.0 - min(cand, 1.0)) ** self.tile_n
         refine = blk_frac * self.n * self.m * self.bytes_per_val / self.visit_bw_discount
-        return self._bytes_cost(approx + refine) \
-            + self.dispatch_overhead / max(batch, 1) \
-            + self.host_sync_overhead * 0.5 \
-            + self.host_sync_overhead * 0.5 / max(batch, 1)
+        return approx + refine * self.sec_per_byte \
+            + 2.0 * self.dispatch_overhead / max(batch, 1) \
+            + self.host_sync_overhead / max(batch, 1)
 
 
 @dataclasses.dataclass
@@ -225,8 +239,9 @@ class Planner:
         return self.explain(q, batch_size=batch_size).method
 
     def break_even_selectivity(self, m_q: Optional[int] = None,
-                               batch_size: int = 1) -> float:
-        """Selectivity where the tree index stops beating the full scan.
+                               batch_size: int = 1,
+                               index_path: str = "tree") -> float:
+        """Selectivity where the index (``index_path``) stops beating the scan.
 
         Bisects the cost model over complete-match queries — reproduces the
         paper's ~1% headline number for paper-like configurations. With
@@ -235,15 +250,19 @@ class Planner:
         but the fused scan's byte amortization pushes the scan toward its
         compute floor (helping scans at large batches) — the net shift is a
         machine-and-batch-size-dependent result the paper's single-query
-        analysis (§8) cannot see.
+        analysis (§8) cannot see. ``index_path="vafile"`` bisects the (now
+        fully batch-fused) VA-file cost instead of the tree cost.
         """
         mq = m_q or self.model.m
         lo_s, hi_s = 1e-8, 1.0
 
         def tree_wins(sel: float) -> bool:
             q = _synthetic_query(self.model.m, mq, sel)
-            return (self.model.cost_tree(q, sel, batch=batch_size)
-                    < self.model.cost_scan(q, batch=batch_size))
+            if index_path == "vafile":
+                idx_cost = self.model.cost_vafile(q, self.hist, batch=batch_size)
+            else:
+                idx_cost = self.model.cost_tree(q, sel, batch=batch_size)
+            return idx_cost < self.model.cost_scan(q, batch=batch_size)
 
         if not tree_wins(lo_s):
             return 0.0

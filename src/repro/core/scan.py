@@ -17,6 +17,11 @@ Batched execution: ``mask_batch`` / ``mask_batch_partial`` evaluate a whole
 ``QueryBatch`` through the fused multi-query kernels (``kernels.multi_scan``)
 — one launch per batch instead of one per query, with the query axis padded
 to a pow2 bucket so arbitrary batch sizes hit a bounded set of jit traces.
+
+Count-only mode: ``count`` / ``count_partial`` / ``count_batch`` reduce the
+match masks to counts *on device* (``ops.mask_counts``), so the per-query
+host-side ``nonzero`` — the dominant cost for large result sets — never runs
+and only O(Q) ints cross to the host.
 """
 from __future__ import annotations
 
@@ -66,33 +71,62 @@ class ColumnarScan:
     def query_partial(self, q: T.RangeQuery) -> np.ndarray:
         return np.nonzero(self.mask_partial(q))[0].astype(np.int64)
 
+    # -- count-only results (device-side reduction, no id materialization) --
+    def count(self, q: T.RangeQuery) -> int:
+        """Match count from one scan launch + one scalar transfer."""
+        qlo, qhi = ops.query_bounds_device(q, self.data_dev.shape[0], self.data_dev.dtype)
+        out = ops.range_scan(self.data_dev, qlo, qhi, tile_n=self.tile_n)
+        return int(ops.device_get(ops.mask_counts(out)))
+
+    def count_partial(self, q: T.RangeQuery) -> int:
+        """Match count touching only the queried dimensions' columns."""
+        dims = np.nonzero(q.dims_mask)[0].astype(np.int32)
+        if dims.size == 0:
+            return self.n
+        qlo, qhi = ops.query_bounds_device(q, self.data_dev.shape[0], self.data_dev.dtype)
+        out = ops.range_scan_vertical(
+            self.data_dev, jnp.asarray(dims), qlo, qhi, tile_n=self.tile_n
+        )
+        return int(ops.device_get(ops.mask_counts(out)))
+
     # -- batched execution (fused multi-query kernels) ---------------------
     # The query axis pads to a pow2 bucket (match-all padding columns, rows
     # dropped here) so arbitrary batch sizes hit a bounded set of jit traces.
     def mask_batch(self, batch: T.QueryBatch) -> np.ndarray:
         """(Q, n) bool match masks from one fused full-scan launch."""
-        q_pad = T.next_pow2(len(batch))
-        lo, up = batch.bounds_columnar(self.data_dev.shape[0], q_pad)
-        out = ops.multi_range_scan(
-            self.data_dev, jnp.asarray(lo, dtype=self.data_dev.dtype),
-            jnp.asarray(up, dtype=self.data_dev.dtype), tile_n=self.tile_n,
-        )
-        return np.asarray(out)[: len(batch), : self.n] > 0
+        out = self._mask_batch_device(batch, partial=False)
+        return ops.device_get(out)[: len(batch), : self.n] > 0
 
     def mask_batch_partial(self, batch: T.QueryBatch) -> np.ndarray:
         """(Q, n) bool masks touching only each query's constrained dims."""
-        q_pad = T.next_pow2(len(batch))
-        dim_ids = batch.padded_dim_ids(q_pad)
-        lo, up = batch.bounds_columnar(self.data_dev.shape[0], q_pad)
-        out = ops.multi_range_scan_vertical(
-            self.data_dev, jnp.asarray(dim_ids),
-            jnp.asarray(lo, dtype=self.data_dev.dtype),
-            jnp.asarray(up, dtype=self.data_dev.dtype), tile_n=self.tile_n,
-        )
-        return np.asarray(out)[: len(batch), : self.n] > 0
+        out = self._mask_batch_device(batch, partial=True)
+        return ops.device_get(out)[: len(batch), : self.n] > 0
 
-    def query_batch(self, batch: T.QueryBatch, partial: bool = False
-                    ) -> list[np.ndarray]:
+    def _mask_batch_device(self, batch: T.QueryBatch, partial: bool) -> jax.Array:
+        """(q_pad, n_pad) device masks from one fused launch (rows >= Q and
+        columns >= n are padding; object padding never matches)."""
+        q_pad = T.next_pow2(len(batch))
+        lo, up = ops.batch_bounds_device(batch, self.data_dev.shape[0],
+                                         self.data_dev.dtype, q_pad=q_pad)
+        if partial:
+            dim_ids = batch.padded_dim_ids(q_pad)
+            return ops.multi_range_scan_vertical(
+                self.data_dev, jnp.asarray(dim_ids), lo, up,
+                tile_n=self.tile_n,
+            )
+        return ops.multi_range_scan(self.data_dev, lo, up, tile_n=self.tile_n)
+
+    def count_batch(self, batch: T.QueryBatch, partial: bool = False
+                    ) -> list[int]:
+        """Per-query match counts: one fused launch, one O(Q) host transfer."""
+        out = self._mask_batch_device(batch, partial)
+        counts = ops.device_get(ops.mask_counts(out))[: len(batch)]
+        return [int(c) for c in counts]
+
+    def query_batch(self, batch: T.QueryBatch, partial: bool = False,
+                    mode: str = "ids") -> list[np.ndarray] | list[int]:
+        if mode == "count":
+            return self.count_batch(batch, partial=partial)
         masks = self.mask_batch_partial(batch) if partial else self.mask_batch(batch)
         return [np.nonzero(masks[k])[0].astype(np.int64) for k in range(len(batch))]
 
@@ -115,15 +149,21 @@ class RowScan:
     def nbytes_index(self) -> int:
         return 0
 
-    def mask(self, q: T.RangeQuery) -> np.ndarray:
+    def _mask_device(self, q: T.RangeQuery) -> jax.Array:
         qlo, qhi = ops.query_bounds_device(q, self.data_dev.shape[1], self.data_dev.dtype)
-        out = ops.range_scan_rows(
+        return ops.range_scan_rows(
             self.data_dev, qlo.T, qhi.T, tile_rows=self.tile_rows
         )
-        return np.asarray(out[: self.n]) > 0
+
+    def mask(self, q: T.RangeQuery) -> np.ndarray:
+        return np.asarray(self._mask_device(q)[: self.n]) > 0
 
     def query(self, q: T.RangeQuery) -> np.ndarray:
         return np.nonzero(self.mask(q))[0].astype(np.int64)
+
+    def count(self, q: T.RangeQuery) -> int:
+        """Match count summed on device (+inf padding rows never match)."""
+        return int(ops.device_get(ops.mask_counts(self._mask_device(q))))
 
 
 def build_row_scan(dataset: T.Dataset, tile_rows: int = 512) -> RowScan:

@@ -23,6 +23,12 @@ import jax.numpy as jnp
 NEG_INF = np.float32(-np.inf)
 POS_INF = np.float32(np.inf)
 
+# Result modes shared by every engine entry point: "ids" materializes sorted
+# matching identifiers (the paper's result definition); "count" returns only
+# per-query match counts, reduced on device (COUNT(*) analytics fast path —
+# skips the host-side ``nonzero`` entirely).
+RESULT_MODES = ("ids", "count")
+
 
 @dataclasses.dataclass(frozen=True)
 class RangeQuery:

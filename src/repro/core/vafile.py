@@ -16,6 +16,15 @@ therefore the most TPU-friendly of the paper's MDIS:
 
 Unlike the tree MDIS, data stays in storage order (no permutation): the
 VA-file is a *scan accelerator*, not a clustering structure.
+
+Batched execution runs *both* phases fused: phase 1 is one
+``multi_va_filter`` launch per batch (grid ``(n_tiles, Q)``, packed words
+fetched from HBM once per batch) whose candidate masks reduce to per-
+(query, block) survivor bits on device — a single small (Q, n_blocks) bool
+readback replaces Q per-query mask transfers — and phase 2 flattens the
+surviving pairs into one ``multi_range_scan_visit`` launch, exactly like the
+tree MDIS. The per-query phases-1 regime this replaced was the one term the
+cost model could not amortize (see ``planner.cost_vafile``).
 """
 from __future__ import annotations
 
@@ -54,6 +63,10 @@ class VAFile:
         """Approximation storage (the VA-file's memory cost vs a plain scan)."""
         return int(np.prod(self.packed_dev.shape)) * 4
 
+    @property
+    def _m_sublane(self) -> int:
+        return -(-self.m // 8) * 8
+
     def query_cells(self, q: T.RangeQuery) -> tuple[np.ndarray, np.ndarray]:
         """Approximate the query: per-dim [cell_lo, cell_hi] intersected cells."""
         cell_lo = np.zeros((self.m,), np.int32)
@@ -65,33 +78,67 @@ class VAFile:
             cell_hi[d] = np.searchsorted(b, q.upper[d], side="right") if np.isfinite(q.upper[d]) else CELLS - 1
         return cell_lo, cell_hi
 
+    def query_cells_batch(self, batch: T.QueryBatch, q_pad: int | None = None
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """Query-minor (m_s, q_pad or Q) cell bounds for the batched filter.
+
+        Sublane-padded rows — and padding query columns beyond Q — carry
+        [0, CELLS-1] match-all bounds (padding queries' rows are dropped by
+        the caller). Per-query values are identical to ``query_cells``:
+        ``searchsorted`` maps -inf to cell 0 and +inf to the last cell.
+        """
+        q_n = len(batch)
+        width = q_pad or q_n
+        cell_lo = np.zeros((self._m_sublane, width), np.int32)
+        cell_hi = np.full((self._m_sublane, width), CELLS - 1, np.int32)
+        for d in range(self.m):
+            b = self.boundaries[d]
+            cell_lo[d, :q_n] = np.searchsorted(b, batch.lower[:, d], side="right")
+            cell_hi[d, :q_n] = np.searchsorted(b, batch.upper[:, d], side="right")
+        return cell_lo, cell_hi
+
     def query(self, q: T.RangeQuery) -> np.ndarray:
         """Two-phase query -> sorted matching object ids."""
         survivors = self._candidate_blocks(q)
         self.last_visited_blocks = int(survivors.size)
         if survivors.size == 0:
             return np.empty((0,), np.int64)
+        masks = self._refine(survivors, q)
+        pos = survivors[:, None] * self.tile_n + np.arange(self.tile_n)[None, :]
+        pos = pos[np.asarray(masks) > 0]
+        return np.sort(pos[pos < self.n]).astype(np.int64)
+
+    def count(self, q: T.RangeQuery) -> int:
+        """Count-only query: refinement masks are summed on device (object
+        padding is +inf and never survives the exact compare)."""
+        survivors = self._candidate_blocks(q)
+        self.last_visited_blocks = int(survivors.size)
+        if survivors.size == 0:
+            return 0
+        masks = self._refine(survivors, q, to_host=False)
+        return int(ops.device_get(jnp.sum(masks != 0)))
+
+    def _refine(self, survivors: np.ndarray, q: T.RangeQuery,
+                to_host: bool = True):
+        """Phase 2: exact visit scan of the surviving blocks -> (v, tile_n)."""
         n_visit = _next_pow2(survivors.size)
         ids = np.full((n_visit,), -1, np.int32)
         ids[: survivors.size] = survivors
         qlo_f, qhi_f = ops.query_bounds_device(q, self.data_dev.shape[0], self.data_dev.dtype)
-        masks = np.asarray(
-            ops.range_scan_visit(self.data_dev, jnp.asarray(ids), qlo_f, qhi_f,
-                                 tile_n=self.tile_n)
-        )[: survivors.size]
-        pos = survivors[:, None] * self.tile_n + np.arange(self.tile_n)[None, :]
-        pos = pos[masks > 0]
-        return np.sort(pos[pos < self.n]).astype(np.int64)
+        masks = ops.range_scan_visit(self.data_dev, jnp.asarray(ids), qlo_f,
+                                     qhi_f, tile_n=self.tile_n)
+        masks = masks[: survivors.size]  # padding visits (id -1) drop
+        return ops.device_get(masks) if to_host else masks
 
     def _candidate_blocks(self, q: T.RangeQuery) -> np.ndarray:
         """Phase 1 for one query: block ids containing >= 1 VA candidate."""
         cell_lo, cell_hi = self.query_cells(q)
-        m_s = -(-self.m // 8) * 8
+        m_s = self._m_sublane
         qlo = np.zeros((m_s, 1), np.int32)
         qhi = np.full((m_s, 1), CELLS - 1, np.int32)
         qlo[: self.m, 0] = cell_lo
         qhi[: self.m, 0] = cell_hi
-        cand = np.asarray(ops.va_filter(
+        cand = ops.device_get(ops.va_filter(
             self.packed_dev, jnp.asarray(qlo), jnp.asarray(qhi), self.m,
             tile_n=self.tile_n,
         )) > 0
@@ -101,29 +148,54 @@ class VAFile:
             n_blocks, self.tile_n).any(axis=1)
         return np.nonzero(block_any)[0].astype(np.int32)
 
-    def query_batch(self, batch: T.QueryBatch) -> list[np.ndarray]:
-        """Batched two-phase query: per-query approximation filters feed one
-        fused exact-refinement launch.
+    def _candidate_blocks_batch(self, batch: T.QueryBatch
+                                ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched phase 1: one fused filter launch, one small host sync.
 
-        Phase 1 stays per-query (the packed filter kernel is single-query —
-        batching it is an open item); phase 2 flattens every surviving
-        (query, block) pair into a single ``multi_range_scan_visit`` call, so
-        the refinement dispatch + host sync amortize over the batch.
+        ``multi_va_filter`` evaluates every query's approximation in a single
+        (n_tiles, Q) launch and reduces the candidate masks to per-
+        (query, block) survivor bits on device, so the only device->host
+        transfer of the phase is one (Q, n_blocks) bool array — the batch
+        counterpart of the Q mask readbacks the per-query path paid.
         """
-        from repro.core.blockindex import run_fused_visit, scatter_visit_results
+        q_n = len(batch)
+        q_pad = _next_pow2(q_n)  # pow2 query bucket bounds jit retraces
+        cell_lo, cell_hi = self.query_cells_batch(batch, q_pad)
+        block_any = ops.multi_va_filter(
+            self.packed_dev, jnp.asarray(cell_lo), jnp.asarray(cell_hi),
+            self.m, tile_n=self.tile_n, block_n=self.tile_n,
+        )
+        surv = ops.device_get(block_any)[:q_n]  # padding queries drop
+        qids, bids = np.nonzero(surv)
+        return qids.astype(np.int32), bids.astype(np.int32)
+
+    def query_batch(self, batch: T.QueryBatch, mode: str = "ids"
+                    ) -> list[np.ndarray] | list[int]:
+        """Batched two-phase query: both phases fused, one launch each.
+
+        Phase 1 is a single ``multi_va_filter`` launch for the whole batch
+        (one host sync for the (Q, n_blocks) survivor bits); phase 2 flattens
+        every surviving (query, block) pair into a single
+        ``multi_range_scan_visit`` call. All per-query dispatch and readback
+        taxes amortize over the batch. ``mode="count"`` reduces the visit
+        masks to per-query counts on device (no id materialization).
+        """
+        from repro.core.blockindex import (run_fused_visit,
+                                           run_fused_visit_counts,
+                                           scatter_visit_results)
 
         q_n = len(batch)
-        qids_l: list[np.ndarray] = []
-        bids_l: list[np.ndarray] = []
-        for k in range(q_n):
-            blocks = self._candidate_blocks(batch[k])
-            qids_l.append(np.full((blocks.size,), k, np.int32))
-            bids_l.append(blocks)
-        qids = np.concatenate(qids_l) if qids_l else np.empty((0,), np.int32)
-        bids = np.concatenate(bids_l) if bids_l else np.empty((0,), np.int32)
+        qids, bids = self._candidate_blocks_batch(batch)
         self.last_visited_blocks = int(qids.size)
         if qids.size == 0:
+            if mode == "count":
+                return [0] * q_n
             return [np.empty((0,), np.int64) for _ in range(q_n)]
+        if mode == "count":
+            counts = run_fused_visit_counts(
+                self.data_dev, qids, bids, batch, self.tile_n, q_n,
+            )
+            return [int(c) for c in counts]
         masks = run_fused_visit(self.data_dev, qids, bids, batch, self.tile_n)
         return scatter_visit_results(
             masks, qids, bids, q_n, self.tile_n, self.n, perm=None,

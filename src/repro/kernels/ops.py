@@ -7,9 +7,17 @@ body executes as the oracle-checked reference path; compiled Mosaic on TPU).
 
 Batched execution: the ``multi_range_scan*`` wrappers drive the fused
 multi-query kernels (``kernels.multi_scan``) — (m_pad, Q) query-minor bounds,
-one launch for a whole query batch. On the XLA backend they route to the
-per-dimension-accumulating refs in ``ref.py``, which are also the honest CPU
-throughput proxy for ``benchmarks/bench_throughput.py``.
+one launch for a whole query batch — and ``multi_va_filter`` does the same
+for the VA-file's packed approximation phase. On the XLA backend they route
+to the per-dimension-accumulating refs in ``ref.py``, which are also the
+honest CPU throughput proxy for ``benchmarks/bench_throughput.py``.
+
+Instrumentation: every public op is built by ``_counted`` — a plain-Python
+wrapper that bumps a named launch counter before delegating to the jitted
+implementation — and ``device_get`` is the counted device->host transfer
+point. Tests use the counters to assert launch/sync budgets (e.g. "one
+phase-1 launch and one host sync per VA-file batch") that wall-clock
+measurements on CPU cannot see.
 """
 from __future__ import annotations
 
@@ -47,6 +55,51 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# -- launch / transfer instrumentation ---------------------------------------
+# Counters live outside jit (wrappers bump them per call, not per trace), so a
+# count of 1 really means one kernel launch / one device->host round trip.
+
+_COUNTERS: dict[str, int] = {}
+
+
+def _bump(name: str) -> None:
+    _COUNTERS[name] = _COUNTERS.get(name, 0) + 1
+
+
+def counter(name: str) -> int:
+    """Launches of op ``name`` (or ``"host_sync"`` transfers) since reset."""
+    return _COUNTERS.get(name, 0)
+
+
+def counters() -> dict[str, int]:
+    return dict(_COUNTERS)
+
+
+def reset_counters() -> None:
+    _COUNTERS.clear()
+
+
+def device_get(x) -> np.ndarray:
+    """Counted device->host transfer — the host-sync tax the cost model prices."""
+    _bump("host_sync")
+    return np.asarray(x)
+
+
+def _counted(name: str, doc: str):
+    """Build the public op: bump the named launch counter, delegate to the
+    jitted implementation. One definition keeps every op in the accounting —
+    a hand-written wrapper that forgets the bump silently escapes it."""
+    def deco(jit_fn):
+        def wrapper(*args, **kwargs):
+            _bump(name)
+            return jit_fn(*args, **kwargs)
+        wrapper.__name__ = wrapper.__qualname__ = name
+        wrapper.__doc__ = doc
+        wrapper.__wrapped__ = jit_fn
+        return wrapper
+    return deco
+
+
 def prepare_columnar(
     cols: np.ndarray, tile_n: int = _rs.DEFAULT_TILE_N, dtype=jnp.float32
 ) -> tuple[np.ndarray, int, int]:
@@ -72,8 +125,21 @@ def query_bounds_device(q: T.RangeQuery, m_pad: int, dtype) -> tuple[jax.Array, 
     return lo_d, up_d
 
 
+def batch_bounds_device(batch, m_pad: int, dtype,
+                        q_pad: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """(m_pad, q_pad or Q) finite device bounds for a QueryBatch.
+
+    Pad rows — and padding query columns beyond Q when ``q_pad`` rounds the
+    batch to a jit bucket — are match-all; callers drop their output rows.
+    """
+    if not isinstance(batch, T.QueryBatch):
+        batch = T.QueryBatch.from_queries(list(batch))
+    lo, up = batch.bounds_columnar(m_pad, q_pad)
+    return jnp.asarray(lo, dtype=dtype), jnp.asarray(up, dtype=dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
-def range_scan(
+def _range_scan_jit(
     data_cm: jax.Array,
     lower: jax.Array,
     upper: jax.Array,
@@ -81,7 +147,6 @@ def range_scan(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Full vectorized range scan over padded columnar data -> (n_pad,) int8."""
     if use_xla():
         return _ref.range_scan_ref(data_cm, lower, upper)
     if interpret is None:
@@ -91,8 +156,14 @@ def range_scan(
     )
 
 
+range_scan = _counted(
+    "range_scan",
+    "Full vectorized range scan over padded columnar data -> (n_pad,) int8.",
+)(_range_scan_jit)
+
+
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
-def range_scan_visit(
+def _range_scan_visit_jit(
     data_cm: jax.Array,
     block_ids: jax.Array,
     lower: jax.Array,
@@ -101,7 +172,6 @@ def range_scan_visit(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Scan only the listed tile ids -> (n_visit, tile_n) int8 masks."""
     if use_xla():
         m_pad, n_pad = data_cm.shape
         blocks = data_cm.reshape(m_pad, n_pad // tile_n, tile_n).transpose(1, 0, 2)
@@ -114,8 +184,14 @@ def range_scan_visit(
     )
 
 
+range_scan_visit = _counted(
+    "range_scan_visit",
+    "Scan only the listed tile ids -> (n_visit, tile_n) int8 masks.",
+)(_range_scan_visit_jit)
+
+
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
-def range_scan_vertical(
+def _range_scan_vertical_jit(
     data_cm: jax.Array,
     dim_ids: jax.Array,
     lower: jax.Array,
@@ -124,7 +200,6 @@ def range_scan_vertical(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Partial-match scan touching only queried dims -> (n_pad,) int8."""
     if use_xla():
         rows = data_cm[dim_ids]  # touch only the queried dimensions' columns
         return _ref.range_scan_ref(rows, lower[dim_ids, 0], upper[dim_ids, 0])
@@ -135,16 +210,14 @@ def range_scan_vertical(
     )
 
 
-def batch_bounds_device(batch, m_pad: int, dtype) -> tuple[jax.Array, jax.Array]:
-    """(m_pad, Q) finite device bounds for a QueryBatch (pad rows = match-all)."""
-    if not isinstance(batch, T.QueryBatch):
-        batch = T.QueryBatch.from_queries(list(batch))
-    lo, up = batch.bounds_columnar(m_pad)
-    return jnp.asarray(lo, dtype=dtype), jnp.asarray(up, dtype=dtype)
+range_scan_vertical = _counted(
+    "range_scan_vertical",
+    "Partial-match scan touching only queried dims -> (n_pad,) int8.",
+)(_range_scan_vertical_jit)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
-def multi_range_scan(
+def _multi_range_scan_jit(
     data_cm: jax.Array,
     lower: jax.Array,
     upper: jax.Array,
@@ -152,7 +225,6 @@ def multi_range_scan(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused full scan of a query batch -> (Q, n_pad) int8 masks."""
     if use_xla():
         return _ref.multi_scan_ref(data_cm, lower, upper)
     if interpret is None:
@@ -162,8 +234,14 @@ def multi_range_scan(
     )
 
 
+multi_range_scan = _counted(
+    "multi_range_scan",
+    "Fused full scan of a query batch -> (Q, n_pad) int8 masks.",
+)(_multi_range_scan_jit)
+
+
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
-def multi_range_scan_vertical(
+def _multi_range_scan_vertical_jit(
     data_cm: jax.Array,
     dim_ids: jax.Array,
     lower: jax.Array,
@@ -172,7 +250,6 @@ def multi_range_scan_vertical(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Batched partial-match scan -> (Q, n_pad) int8 masks."""
     if use_xla():
         return _ref.multi_scan_vertical_ref(data_cm, dim_ids, lower, upper)
     if interpret is None:
@@ -182,8 +259,14 @@ def multi_range_scan_vertical(
     )
 
 
+multi_range_scan_vertical = _counted(
+    "multi_range_scan_vertical",
+    "Batched partial-match scan -> (Q, n_pad) int8 masks.",
+)(_multi_range_scan_vertical_jit)
+
+
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
-def multi_range_scan_visit(
+def _multi_range_scan_visit_jit(
     data_cm: jax.Array,
     query_ids: jax.Array,
     block_ids: jax.Array,
@@ -193,8 +276,6 @@ def multi_range_scan_visit(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Batched two-phase refinement over a (query, block) visit list
-    -> (V, tile_n) int8 per-visit masks."""
     if use_xla():
         m_pad, n_pad = data_cm.shape
         blocks = data_cm.reshape(m_pad, n_pad // tile_n, tile_n).transpose(1, 0, 2)
@@ -207,8 +288,15 @@ def multi_range_scan_visit(
     )
 
 
+multi_range_scan_visit = _counted(
+    "multi_range_scan_visit",
+    "Batched two-phase refinement over a (query, block) visit list "
+    "-> (V, tile_n) int8 per-visit masks.",
+)(_multi_range_scan_visit_jit)
+
+
 @functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))
-def range_scan_rows(
+def _range_scan_rows_jit(
     data_rm: jax.Array,
     lower: jax.Array,
     upper: jax.Array,
@@ -216,7 +304,6 @@ def range_scan_rows(
     tile_rows: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Row-major (horizontal layout) scan -> (n_pad,) int8."""
     if use_xla():
         ok = jnp.logical_and(data_rm >= lower, data_rm <= upper)
         return jnp.all(ok, axis=1).astype(jnp.int8)
@@ -227,8 +314,14 @@ def range_scan_rows(
     )
 
 
+range_scan_rows = _counted(
+    "range_scan_rows",
+    "Row-major (horizontal layout) scan -> (n_pad,) int8.",
+)(_range_scan_rows_jit)
+
+
 @functools.partial(jax.jit, static_argnames=("m", "tile_n", "interpret"))
-def va_filter(
+def _va_filter_jit(
     packed: jax.Array,
     cell_lo: jax.Array,
     cell_hi: jax.Array,
@@ -237,7 +330,6 @@ def va_filter(
     tile_n: int = _va.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Packed VA-file approximation filter -> (n_pad,) int8 candidate mask."""
     if use_xla():
         return _ref.va_filter_packed_ref(packed, cell_lo[:, 0], cell_hi[:, 0], m)
     if interpret is None:
@@ -247,8 +339,84 @@ def va_filter(
     )
 
 
+va_filter = _counted(
+    "va_filter",
+    "Packed VA-file approximation filter -> (n_pad,) int8 candidate mask.",
+)(_va_filter_jit)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tile_n", "block_n", "interpret"))
+def _multi_va_filter_jit(
+    packed: jax.Array,
+    cell_lo: jax.Array,
+    cell_hi: jax.Array,
+    m: int,
+    *,
+    tile_n: int = _va.DEFAULT_TILE_N,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if use_xla():
+        out = _ref.multi_va_filter_packed_ref(packed, cell_lo, cell_hi, m)
+    else:
+        if interpret is None:
+            interpret = default_interpret()
+        out = _va.multi_va_filter_packed(
+            packed, cell_lo, cell_hi, m, tile_n=tile_n, interpret=interpret
+        )
+    if block_n is not None:
+        q_n, n_pad = out.shape
+        # Reduce to per-(query, block) survivor bits *on device*: only the
+        # small (Q, n_blocks) array ever crosses to the host.
+        out = jnp.any((out != 0).reshape(q_n, n_pad // block_n, block_n), axis=2)
+    return out
+
+
+multi_va_filter = _counted(
+    "multi_va_filter",
+    "Batched packed VA filter, one launch per query batch: (Q, n_pad) int8 "
+    "candidate masks, or — with ``block_n`` — the on-device reduction to "
+    "(Q, n_pad // block_n) bool per-block survivor bits (the phase-2 visit "
+    "list seed; the reduction rides in the same jit).",
+)(_multi_va_filter_jit)
+
+
+@jax.jit
+def _mask_counts_jit(mask: jax.Array) -> jax.Array:
+    return jnp.sum(mask != 0, axis=-1).astype(jnp.int32)
+
+
+def mask_counts(mask: jax.Array) -> jax.Array:
+    """On-device match counts over the object axis (count-only result mode).
+
+    Works for both (n_pad,) single-query and (Q, n_pad) batched masks; padding
+    objects are +inf sentinels that never match, so summing the padded axis is
+    exact. The sum is the ``distributed_count`` pattern localized to one
+    device: the result crossing to host is O(Q) ints, never an id array.
+    """
+    return _mask_counts_jit(mask)
+
+
+@functools.partial(jax.jit, static_argnames=("n_queries",))
+def _visit_counts_jit(masks: jax.Array, query_ids: jax.Array,
+                      valid: jax.Array, n_queries: int) -> jax.Array:
+    per_visit = jnp.sum(masks != 0, axis=-1).astype(jnp.int32) * valid
+    return jnp.zeros((n_queries,), jnp.int32).at[query_ids].add(per_visit)
+
+
+def visit_counts(masks: jax.Array, query_ids: jax.Array, valid: jax.Array,
+                 n_queries: int) -> jax.Array:
+    """Reduce (V, tile_n) visit masks to per-query match counts on device.
+
+    ``valid`` zeroes padding visits (block id < 0) so their clamped block-0
+    scans never count; duplicates cannot occur (each (query, block) pair is
+    visited at most once).
+    """
+    return _visit_counts_jit(masks, query_ids, valid, n_queries)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def kv_visit_attention(
+def _kv_visit_attention_jit(
     q: jax.Array,
     k_blocks: jax.Array,
     v_blocks: jax.Array,
@@ -257,7 +425,6 @@ def kv_visit_attention(
     *,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Block-visit decode attention (zone-map-pruned KV) -> (B, KV, G, hd)."""
     from repro.kernels import kv_visit as _kvv
     if use_xla():
         return _ref.kv_visit_attention_ref(q, k_blocks, v_blocks, block_ids, pos)
@@ -265,3 +432,9 @@ def kv_visit_attention(
         interpret = default_interpret()
     return _kvv.kv_visit_attention(q, k_blocks, v_blocks, block_ids, pos,
                                    interpret=interpret)
+
+
+kv_visit_attention = _counted(
+    "kv_visit_attention",
+    "Block-visit decode attention (zone-map-pruned KV) -> (B, KV, G, hd).",
+)(_kv_visit_attention_jit)

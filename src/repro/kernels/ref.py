@@ -194,3 +194,33 @@ def va_filter_packed_ref(
                 acc, jnp.logical_and(field >= cell_lo[d], field <= cell_hi[d])
             )
     return acc.astype(jnp.int8)
+
+
+def multi_va_filter_packed_ref(
+    packed: jax.Array, cell_lo: jax.Array, cell_hi: jax.Array, m: int
+) -> jax.Array:
+    """Oracle for the batched packed VA filter: one unpack sweep, all queries.
+
+    Args:
+      packed: (w, n) int32, word w holds dims [16w, 16w+16) in 2-bit fields.
+      cell_lo, cell_hi: (m_s, Q) int32 per-query cell bounds, query-minor
+        (padded rows carry [0, 3] match-all bounds).
+      m: true number of dimensions (w = ceil(m / 16)).
+
+    Returns:
+      (Q, n) int8 candidate masks, row q = query q.
+    """
+    w, n = packed.shape
+    q_n = cell_lo.shape[1]
+    acc = jnp.ones((q_n, n), dtype=jnp.bool_)
+    for wi in range(w):
+        word = packed[wi]  # (n,)
+        for k in range(16):
+            d = wi * 16 + k
+            if d >= m:
+                break
+            field = jnp.bitwise_and(jnp.right_shift(word, 2 * k), 3)  # (n,)
+            ok = jnp.logical_and(field[None, :] >= cell_lo[d, :, None],
+                                 field[None, :] <= cell_hi[d, :, None])
+            acc = jnp.logical_and(acc, ok)
+    return acc.astype(jnp.int8)

@@ -10,8 +10,19 @@ word), converting the first phase from HBM-bandwidth-bound to nearly free.
 Packing: word ``w`` of object ``i`` holds dims ``[16w, 16w+16)`` — dim
 ``16w + k`` occupies bits ``[2k, 2k+2)``. The kernel unpacks with static
 shift/mask ops (VPU int32 lanes) and AND-reduces across dims in registers.
+
+Two entry points:
+
+  * ``va_filter_packed``       — single query: grid ``(n_tiles,)``.
+  * ``multi_va_filter_packed`` — a whole query batch in one launch: grid
+    ``(n_tiles, Q)`` with the query axis innermost, so the packed-word tile's
+    block index map is constant across q and each (w, tile_n) tile streams
+    from HBM once per *batch* — the same fusion ``multi_scan`` applies to the
+    exact scans, here applied to the approximation phase.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -75,8 +86,6 @@ def va_filter_packed(
     m_s = cell_lo.shape[0]
     assert m_s >= m and cell_lo.shape == cell_hi.shape == (m_s, 1)
 
-    import functools
-
     grid = (n_pad // tile_n,)
     out = pl.pallas_call(
         functools.partial(_va_kernel, m=m),
@@ -91,3 +100,50 @@ def va_filter_packed(
         interpret=interpret,
     )(cell_lo.astype(jnp.int32), cell_hi.astype(jnp.int32), packed)
     return out[0]
+
+
+def multi_va_filter_packed(
+    packed: jax.Array,
+    cell_lo: jax.Array,
+    cell_hi: jax.Array,
+    m: int,
+    *,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> jax.Array:
+    """Candidate masks for a whole query batch from one launch.
+
+    The kernel body is the single-query unpack-compare (``_va_kernel``); only
+    the grid changes: ``(n_tiles, Q)`` with the query axis innermost, so the
+    (w, tile_n) packed-word tile is fetched from HBM once per batch and
+    compared against every query's cell bounds while resident in VMEM.
+
+    Args:
+      packed: (w, n_pad) int32 packed codes, n_pad % tile_n == 0.
+      cell_lo, cell_hi: (m_s, Q) int32 per-query cell bounds, query-minor
+        (one column per query, like the ``multi_scan`` bounds layout); padded
+        rows carry [0, 3] match-all bounds.
+      m: true dimensionality.
+
+    Returns:
+      (Q, n_pad) int8 candidate masks, row q = query q.
+    """
+    w, n_pad = packed.shape
+    assert n_pad % tile_n == 0 and tile_n % LANES == 0
+    m_s, q_n = cell_lo.shape
+    assert m_s >= m and cell_lo.shape == cell_hi.shape == (m_s, q_n)
+
+    grid = (n_pad // tile_n, q_n)
+    out = pl.pallas_call(
+        functools.partial(_va_kernel, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_s, 1), lambda i, q: (0, q)),
+            pl.BlockSpec((m_s, 1), lambda i, q: (0, q)),
+            pl.BlockSpec((w, tile_n), lambda i, q: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_n), lambda i, q: (q, i)),
+        out_shape=jax.ShapeDtypeStruct((q_n, n_pad), jnp.int8),
+        interpret=interpret,
+    )(cell_lo.astype(jnp.int32), cell_hi.astype(jnp.int32), packed)
+    return out

@@ -16,16 +16,20 @@ deterministic under test while mirroring the admission loop a real deployment
 would run. Throughput (queries/sec — the primary metric of the multi-query
 literature, e.g. "Learning Multi-dimensional Indexes") accumulates in
 ``ServerStats``.
+
+``mode="count"`` serves COUNT(*)-style analytics: tickets resolve to int
+match counts reduced on device, never paying the per-query host-side
+``nonzero`` that dominates large result sets.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
 
-from repro.core import MDRQEngine, RangeQuery
+from repro.core import MDRQEngine, RangeQuery, RESULT_MODES
 
 
 @dataclasses.dataclass
@@ -33,10 +37,10 @@ class Ticket:
     """Handle for one submitted query; ``result()`` blocks (flushes) if needed."""
 
     _server: "MDRQServer"
-    _result: Optional[np.ndarray] = None
+    _result: Optional[Union[np.ndarray, int]] = None
     _done: bool = False
 
-    def result(self) -> np.ndarray:
+    def result(self) -> Union[np.ndarray, int]:
         if not self._done:
             self._server.flush()
         assert self._done, "flush did not resolve this ticket"
@@ -72,13 +76,17 @@ class MDRQServer:
         max_batch: int = 128,
         max_wait_s: float = 2e-3,
         method: str = "auto",
+        mode: str = "ids",
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if mode not in RESULT_MODES:
+            raise ValueError(f"unknown mode {mode!r}; options: {RESULT_MODES}")
         self.engine = engine
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.method = method
+        self.mode = mode
         self.stats = ServerStats()
         self._pending: list[tuple[RangeQuery, Ticket]] = []
         self._oldest_t: float = 0.0
@@ -89,6 +97,11 @@ class MDRQServer:
 
     def submit(self, q: RangeQuery) -> Ticket:
         """Enqueue one query; flushes when a batching trigger fires."""
+        if q.m != self.engine.dataset.m:
+            # reject poison queries before they enter the window — inside a
+            # batch they would fail every co-batched query's flush
+            raise ValueError(
+                f"query dims {q.m} != dataset dims {self.engine.dataset.m}")
         ticket = Ticket(self)
         if not self._pending:
             self._oldest_t = time.perf_counter()
@@ -105,20 +118,29 @@ class MDRQServer:
         pending, self._pending = self._pending, []
         queries = [q for q, _ in pending]
         t0 = time.perf_counter()
-        results = self.engine.query_batch(queries, method=self.method)
+        try:
+            results = self.engine.query_batch(queries, method=self.method,
+                                              mode=self.mode)
+        except Exception:
+            # don't lose co-batched queries: put them back (in order) so
+            # their tickets remain resolvable after the caller handles the
+            # error
+            self._pending = pending + self._pending
+            raise
         dt = time.perf_counter() - t0
-        for (_, ticket), ids in zip(pending, results):
-            ticket._result = ids
+        for (_, ticket), res in zip(pending, results):
+            ticket._result = res
             ticket._done = True
         self.stats.n_queries += len(pending)
         self.stats.n_batches += 1
         self.stats.busy_seconds += dt
-        self.stats.n_results += int(sum(r.size for r in results))
+        self.stats.n_results += self.engine.last_batch_stats.n_results
         for m, c in self.engine.last_batch_stats.method_counts.items():
             self.stats.method_counts[m] = self.stats.method_counts.get(m, 0) + c
         return len(pending)
 
-    def serve_all(self, queries: list[RangeQuery]) -> list[np.ndarray]:
+    def serve_all(self, queries: list[RangeQuery]
+                  ) -> list[Union[np.ndarray, int]]:
         """Drive a whole workload through the batching window; results come
         back positionally aligned with the input (benchmark convenience)."""
         tickets = [self.submit(q) for q in queries]

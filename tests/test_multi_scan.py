@@ -11,7 +11,9 @@ import pytest
 from repro.core import (Dataset, MDRQEngine, QueryBatch, RangeQuery,
                         match_ids_np, match_mask_np)
 from repro.core.planner import CostModel, Planner, Histograms
+from repro.core.vafile import build_vafile
 from repro.kernels import ops, ref
+from repro.kernels.va_filter import pack_codes
 
 
 def _mixed_queries(m, cols, rng, n_q):
@@ -94,6 +96,96 @@ def test_multi_scan_visit_vs_oracle():
                                       full[b * tile_n:(b + 1) * tile_n])
 
 
+@pytest.mark.parametrize("m,n_q", [(5, 3), (19, 6), (33, 4)])
+def test_multi_va_filter_vs_single_and_oracle(m, n_q):
+    """Batched phase 1: one-launch masks == per-query va_filter == ref,
+    including point (cell_lo == cell_hi) and match-all queries."""
+    rng = np.random.default_rng(m * 7 + n_q)
+    n, tile_n = 4096, 1024
+    codes = rng.integers(0, 4, size=(m, n)).astype(np.uint8)
+    packed = jnp.asarray(pack_codes(codes))
+    m_s = -(-m // 8) * 8
+    qlo = np.zeros((m_s, n_q), np.int32)
+    qhi = np.full((m_s, n_q), 3, np.int32)
+    qlo[:m] = rng.integers(0, 4, size=(m, n_q))
+    qhi[:m] = np.minimum(3, qlo[:m] + rng.integers(0, 3, size=(m, n_q)))
+    qlo[:m, 0] = qhi[:m, 0]          # point query in cell space
+    qlo[:m, -1], qhi[:m, -1] = 0, 3  # match-all
+    out = np.asarray(ops.multi_va_filter(packed, jnp.asarray(qlo),
+                                         jnp.asarray(qhi), m, tile_n=tile_n))
+    np.testing.assert_array_equal(out, np.asarray(ref.multi_va_filter_packed_ref(
+        packed, jnp.asarray(qlo), jnp.asarray(qhi), m)))
+    for k in range(n_q):
+        single = np.asarray(ops.va_filter(
+            packed, jnp.asarray(qlo[:, k: k + 1]), jnp.asarray(qhi[:, k: k + 1]),
+            m, tile_n=tile_n))
+        np.testing.assert_array_equal(out[k], single)
+    # on-device block reduction == host-side reduction of the full masks
+    blocks = np.asarray(ops.multi_va_filter(packed, jnp.asarray(qlo),
+                                            jnp.asarray(qhi), m,
+                                            tile_n=tile_n, block_n=tile_n))
+    np.testing.assert_array_equal(
+        blocks, out.reshape(n_q, -1, tile_n).any(axis=2))
+
+
+def _queries_with_points(cols, rng, n_q):
+    """Mixed queries plus point predicates (lb == ub at real records)."""
+    m = cols.shape[0]
+    out = _mixed_queries(m, cols, rng, n_q)
+    rec = cols[:, rng.integers(cols.shape[1])]
+    out.append(RangeQuery.complete(rec, rec))                # full point query
+    out.append(RangeQuery.partial(m, {1: (float(rec[1]), float(rec[1]))}))
+    return out
+
+
+def test_vafile_batch_one_launch_one_sync(uni5):
+    """Tentpole budget: the batched VA path issues exactly one phase-1 launch
+    and one phase-1 host sync per batch (plus one fused visit launch + mask
+    readback), never the per-query va_filter — results bit-identical to the
+    single-query path."""
+    vf = build_vafile(uni5, tile_n=512)
+    rng = np.random.default_rng(17)
+    queries = _queries_with_points(uni5.cols, rng, 6)
+    singles = [vf.query(q) for q in queries]
+    batch = QueryBatch.from_queries(queries)
+
+    ops.reset_counters()
+    batched = vf.query_batch(batch)
+    assert ops.counter("multi_va_filter") == 1   # one phase-1 launch
+    assert ops.counter("va_filter") == 0         # never per-query
+    assert ops.counter("multi_range_scan_visit") == 1
+    assert ops.counter("host_sync") == 2         # survivor bits + visit masks
+    for s, b in zip(singles, batched):
+        np.testing.assert_array_equal(s, b)
+
+    ops.reset_counters()
+    counts = vf.query_batch(batch, mode="count")
+    assert ops.counter("multi_va_filter") == 1
+    assert ops.counter("host_sync") == 2
+    assert counts == [s.size for s in singles]
+    assert all(isinstance(c, int) for c in counts)
+
+
+def test_vafile_batch_gmrqb_templates():
+    """GMRQB-style batches (templates with point predicates) through the
+    batched VA path: ids and counts match the single-query path / oracle."""
+    from repro.data import gmrqb
+
+    ds = gmrqb.build(8192, seed=3)
+    vf = build_vafile(ds, tile_n=1024)
+    rng = np.random.default_rng(9)
+    queries = [gmrqb.template(k, rng, ds) for k in (1, 4, 5, 7, 8)]
+    batch = QueryBatch.from_queries(queries)
+    batched = vf.query_batch(batch)
+    counts = vf.query_batch(batch, mode="count")
+    for k, q in enumerate(queries):
+        oracle = match_ids_np(ds.cols, q)
+        np.testing.assert_array_equal(batched[k], oracle)
+        np.testing.assert_array_equal(vf.query(q), oracle)
+        assert counts[k] == oracle.size
+        assert vf.count(q) == oracle.size
+
+
 # -- (b) query_batch == per-query query for all methods ----------------------
 
 @pytest.mark.parametrize("method", ["scan", "scan_vertical", "kdtree",
@@ -109,6 +201,47 @@ def test_query_batch_equals_single(method, uni5):
         np.testing.assert_array_equal(batched[k], eng.query(q, method))
         if method != "auto":
             np.testing.assert_array_equal(batched[k], match_ids_np(uni5.cols, q))
+
+
+# -- count-only result mode --------------------------------------------------
+
+@pytest.fixture(scope="module")
+def eng_all(uni5):
+    return MDRQEngine(uni5, tile_n=512, rowscan=True)
+
+
+@pytest.mark.parametrize("method", ["scan", "scan_vertical", "rowscan",
+                                    "kdtree", "rstar", "vafile", "auto"])
+def test_count_mode_equals_ids_sizes(method, eng_all, uni5):
+    rng = np.random.default_rng(29)
+    queries = _queries_with_points(uni5.cols, rng, 5)
+    counts = eng_all.query_batch(queries, method=method, mode="count")
+    assert all(isinstance(c, int) for c in counts)
+    assert eng_all.last_batch_stats.n_results == sum(counts)
+    for k, q in enumerate(queries):
+        expected = match_ids_np(uni5.cols, q).size
+        assert counts[k] == expected, (method, k)
+        assert eng_all.query(q, method, mode="count") == expected
+        assert eng_all.last_stats.n_results == expected
+
+
+def test_count_mode_scan_single_launch_no_mask_readback(eng_all, uni5):
+    """Count mode sums masks on device: one fused launch, one O(Q) transfer,
+    and no (Q, n) mask ever crosses to the host."""
+    rng = np.random.default_rng(31)
+    queries = _mixed_queries(uni5.m, uni5.cols, rng, 8)
+    ops.reset_counters()
+    eng_all.query_batch(queries, method="scan", mode="count")
+    assert ops.counter("multi_range_scan") == 1
+    assert ops.counter("host_sync") == 1
+
+
+def test_count_mode_rejects_unknown(eng_all, uni5):
+    q = RangeQuery.partial(uni5.m, {0: (0.1, 0.2)})
+    with pytest.raises(ValueError):
+        eng_all.query(q, mode="top_k")
+    with pytest.raises(ValueError):
+        eng_all.query_batch([q], mode="top_k")
 
 
 def test_query_batch_accepts_querybatch_object(uni5):

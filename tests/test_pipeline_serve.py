@@ -61,6 +61,77 @@ def test_gmrqb_engine_equality():
         oracle = match_ids_np(ds.cols, q)
         for meth in ("scan", "scan_vertical", "kdtree", "vafile", "auto"):
             np.testing.assert_array_equal(eng.query(q, meth), oracle)
+            assert eng.query(q, meth, mode="count") == oracle.size
+
+
+def test_stats_qps_zero_on_empty_paths():
+    """Both rate reports return 0.0 — never inf — when nothing was measured:
+    ``flush()`` on empty pending and ``query_batch([])``."""
+    from repro.core import BatchStats, Dataset, MDRQEngine
+    from repro.serve.mdrq_server import MDRQServer, ServerStats
+
+    assert ServerStats().qps == 0.0
+    assert BatchStats(5, 0.0, {}, 0).qps == 0.0  # zero seconds, nonzero work
+
+    rng = np.random.default_rng(4)
+    eng = MDRQEngine(Dataset(rng.random((3, 2048), dtype=np.float32)),
+                     structures=("scan",), tile_n=512)
+    assert eng.query_batch([]) == []
+    assert eng.last_batch_stats.qps == 0.0
+    assert eng.last_batch_stats.n_queries == 0
+
+    srv = MDRQServer(eng, max_batch=8, max_wait_s=float("inf"))
+    assert srv.flush() == 0  # empty flush: no batch recorded, rate stays 0.0
+    assert srv.stats.n_batches == 0
+    assert srv.stats.qps == 0.0
+
+
+def test_server_survives_engine_failure_and_rejects_bad_dims():
+    """A failing flush must not lose co-batched queries, and dim-mismatched
+    queries are rejected at submit (before they can poison a window)."""
+    from repro.core import Dataset, MDRQEngine, RangeQuery
+    from repro.serve.mdrq_server import MDRQServer
+
+    rng = np.random.default_rng(8)
+    eng = MDRQEngine(Dataset(rng.random((3, 2048), dtype=np.float32)),
+                     structures=("scan",), tile_n=512)
+    srv = MDRQServer(eng, max_batch=8, max_wait_s=float("inf"))
+    with pytest.raises(ValueError):
+        srv.submit(RangeQuery.partial(5, {0: (0.0, 1.0)}))  # wrong dims
+    assert srv.n_pending == 0
+
+    q = RangeQuery.partial(3, {0: (0.2, 0.8)})
+    ticket = srv.submit(q)
+    # make the engine fail once mid-flush; pending must be restored
+    real = eng.query_batch
+    eng.query_batch = lambda *a, **k: (_ for _ in ()).throw(RuntimeError("boom"))
+    with pytest.raises(RuntimeError):
+        srv.flush()
+    assert srv.n_pending == 1
+    eng.query_batch = real
+    np.testing.assert_array_equal(ticket.result(),
+                                  match_ids_np(eng.dataset.cols, q))
+
+
+def test_server_count_mode():
+    """A count-mode serving window resolves tickets to device-reduced ints."""
+    from repro.core import Dataset, MDRQEngine, RangeQuery
+    from repro.serve.mdrq_server import MDRQServer
+
+    rng = np.random.default_rng(12)
+    ds = Dataset(rng.random((4, 4096), dtype=np.float32))
+    eng = MDRQEngine(ds, structures=("scan",), tile_n=512)
+    queries = [RangeQuery.partial(4, {0: (0.0, 0.3), 2: (0.1, 0.9)}),
+               RangeQuery.partial(4, {1: (0.5, 0.5)}),  # point predicate
+               RangeQuery.partial(4, {})]
+    srv = MDRQServer(eng, max_batch=2, max_wait_s=float("inf"), mode="count")
+    results = srv.serve_all(queries)
+    for q, c in zip(queries, results):
+        assert isinstance(c, int)
+        assert c == match_ids_np(ds.cols, q).size
+    assert srv.stats.n_results == sum(results)
+    with pytest.raises(ValueError):
+        MDRQServer(eng, mode="nope")
 
 
 def test_batch_server_completes_all_admitted():

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import Dataset, RangeQuery
+from repro.core import Dataset, MDRQEngine, RangeQuery
 from repro.core.planner import BINS, CostModel, Histograms, Planner
 
 
@@ -24,6 +24,62 @@ def test_histogram_edge_cases(uni5):
     assert hist.selectivity(RangeQuery.partial(5, {})) == 1.0
     assert hist.selectivity(RangeQuery.partial(5, {0: (5.0, 6.0)})) == 0.0
     assert hist.selectivity(RangeQuery.partial(5, {0: (-5.0, 5.0)})) == 1.0
+    # empty range (lb > ub) estimates zero
+    assert hist.dim_selectivity(0, 0.7, 0.3) == 0.0
+
+
+def test_point_predicate_selectivity_floor(uni5):
+    """Point predicates (lb == ub, GMRQB-style) must estimate >= 1/n, not 0 —
+    a 0.0 estimate mis-ranks every access path for the query."""
+    hist = Histograms.build(uni5)
+    v = float(uni5.cols[2, 123])
+    assert hist.dim_selectivity(2, v, v) >= 1.0 / uni5.n
+    # in-domain boundary points too
+    e0 = float(hist.edges[2][0])
+    assert hist.dim_selectivity(2, e0, e0) >= 1.0 / uni5.n
+    # out-of-domain points stay zero
+    assert hist.dim_selectivity(2, 7.0, 7.0) == 0.0
+    # a full point query plans with selectivity >= 1/n and a usable plan
+    rec = uni5.cols[:, 123]
+    q = RangeQuery.complete(rec, rec)
+    p = Planner(hist, CostModel(n=uni5.n, m=5))
+    plan = p.explain(q)
+    assert plan.est_selectivity >= 1.0 / uni5.n
+    assert plan.method in plan.costs
+
+
+def test_all_built_structures_plannable(uni5):
+    """Every structure the engine builds must be in the planner's available
+    tuple (the seed engine built the R*-tree but never planned it)."""
+    eng = MDRQEngine(uni5, tile_n=512)
+    for name in ("kdtree", "rstar", "vafile"):
+        assert getattr(eng, name) is not None
+        assert name in eng.planner.available
+    q = RangeQuery.complete([0.4] * 5, [0.6] * 5)
+    assert "rstar" in eng.planner.explain(q).costs
+    # engines built with a subset stay consistent
+    eng2 = MDRQEngine(uni5, structures=("scan", "rstar"), tile_n=512)
+    assert "rstar" in eng2.planner.available
+    assert "kdtree" not in eng2.planner.available
+
+
+def test_vafile_cost_amortizes_with_batch(uni5):
+    """Batched phase 1: the VA-file's filter bytes and both sync halves now
+    divide by the batch size."""
+    hist = Histograms.build(uni5)
+    model = CostModel(n=1_000_000, m=5)
+    q = RangeQuery.complete([0.0] * 5, [0.1] * 5)
+    c1 = model.cost_vafile(q, hist, batch=1)
+    c128 = model.cost_vafile(q, hist, batch=128)
+    assert c128 < c1
+    # the amortized part includes the approximation stream, not just taxes:
+    # the gap must exceed the full fixed-tax amortization alone
+    fixed = 2.0 * model.dispatch_overhead + model.host_sync_overhead
+    assert (c1 - c128) > fixed * (1 - 1 / 128) * 0.99
+    p = Planner(hist, model)
+    be = p.break_even_selectivity(index_path="vafile", batch_size=8)
+    assert 0.0 <= be <= 1.0
+
 
 
 def test_break_even_band_paper_scale(uni5):
