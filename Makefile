@@ -1,11 +1,18 @@
 # Developer entry points. The tier-1 gate is exactly what CI runs.
 PYTHONPATH := src
 
-.PHONY: test smoke bench-throughput bench-count bench
+.PHONY: test test-dist smoke bench-throughput bench-count bench-dist bench
 
 # Tier-1 verify: the full test suite, fail-fast.
 test:
 	PYTHONPATH=src python -m pytest -x -q
+
+# Distributed suite on a forced 8-device CPU platform: the in-process
+# equivalence/counter tests run against a real multi-device mesh here
+# (under plain `make test` they run single-device).
+test-dist:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+	python -m pytest -q tests/test_distributed_batched.py tests/test_distributed.py
 
 # Fast interpret-mode smoke of the fused multi-query kernels (oracle-checked).
 smoke:
@@ -18,6 +25,10 @@ bench-throughput:
 # Count-only result mode sweep (device-side reduction, no host nonzero).
 bench-count:
 	PYTHONPATH=src python -m benchmarks.run --only throughput-count
+
+# Cross-device batched scan sweep on the 8-device CPU proxy.
+bench-dist:
+	PYTHONPATH=src python -m benchmarks.bench_throughput --devices
 
 # Full benchmark matrix (quick sizes).
 bench:

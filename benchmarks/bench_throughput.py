@@ -13,9 +13,15 @@ device and the per-query host-side ``nonzero`` never runs, so the count/ids
 qps ratio isolates the result-materialization tax from the kernel work.
 """
 import os
+import sys
 
 if __name__ == "__main__":  # direct module run: set the backend before any
     os.environ.setdefault("REPRO_KERNEL_BACKEND", "xla")  # repro import
+    if "--devices" in sys.argv:
+        # the device count locks at first XLA init, so the CPU proxy for the
+        # cross-device sweep must be forced before anything imports jax
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np
 
@@ -95,6 +101,42 @@ def run_count(quick: bool = True) -> None:
                  f"qps={r_cnt:.1f};count_vs_ids={r_cnt / r_ids:.2f}x")
 
 
+def run_devices(quick: bool = True) -> None:
+    """Cross-device batched-scan sweep (``--devices`` / ``make bench-dist``).
+
+    Shards the dataset over 1/2/4/8-device meshes and drives the fixed
+    ``scan`` path through ``DistributedScan`` at the largest batch, in both
+    result modes. On CPU the devices are ``xla_force_host_platform_device_
+    count`` shards of one socket — the honest proxy for *launch structure*
+    (one collective per batch), not for bandwidth scaling, which needs a real
+    TPU mesh (every CPU "device" shares the same memory bus).
+    """
+    import jax
+
+    from repro.core.distributed import make_data_mesh
+
+    avail = len(jax.devices())
+    if avail < 2:
+        print("# run_devices: single-device process; run via "
+              "`make bench-dist` (or --devices) for the 8-device CPU proxy",
+              flush=True)
+    n = 200_000 if quick else 1_000_000
+    ds = gmrqb.build(n, seed=0)
+    queries = [q for _, q in gmrqb.mixed_workload(ds, 128, seed=2)]
+    batch = BATCH_SIZES[-1]
+    base: dict = {}
+    for d in (1, 2, 4, 8):
+        if d > avail:
+            continue
+        # one engine (one pad + shard placement) per mesh size, both modes
+        eng = MDRQEngine(ds, structures=("scan",), mesh=make_data_mesh(d))
+        for mode in ("ids", "count"):
+            r, _ = _throughput(eng, queries, batch, method="scan", mode=mode)
+            base.setdefault(mode, r)
+            emit_row(f"throughput/dist/{mode}/D{d}/B{batch}", 1e6 / r,
+                     f"qps={r:.1f};speedup_vs_D1={r / base[mode]:.2f}x")
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -102,7 +144,13 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--mode", choices=("ids", "count"), default="ids",
                     help="result mode to sweep")
+    ap.add_argument("--devices", action="store_true",
+                    help="cross-device batched scan sweep (forces an "
+                         "8-device CPU platform when XLA_FLAGS is unset)")
     args = ap.parse_args()
     from benchmarks.common import CSV_HEADER
     print(CSV_HEADER, flush=True)
-    (run_count if args.mode == "count" else run)(quick=not args.full)
+    if args.devices:
+        run_devices(quick=not args.full)
+    else:
+        (run_count if args.mode == "count" else run)(quick=not args.full)

@@ -29,6 +29,10 @@ SECTIONS = [
     ("fig11", "benchmarks.bench_scaling"),
     ("throughput", "benchmarks.bench_throughput"),
     ("throughput-count", "benchmarks.bench_throughput", "run_count"),
+    # multi-device sweep: needs XLA_FLAGS=--xla_force_host_platform_device_
+    # count=8 in the environment (see `make bench-dist`); degrades to a D1
+    # row + a pointer when the process only sees one device.
+    ("throughput-dist", "benchmarks.bench_throughput", "run_devices"),
     ("mem", "benchmarks.bench_memory"),
     ("roofline", "benchmarks.bench_rooflines"),
 ]

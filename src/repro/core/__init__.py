@@ -13,7 +13,8 @@ from repro.core.scan import build_columnar_scan, build_row_scan
 from repro.core.kdtree import build_kdtree
 from repro.core.rstar import build_rstar
 from repro.core.vafile import build_vafile
-from repro.core.planner import CostModel, Histograms, Planner
+from repro.core.planner import (CalibrationFit, CalibrationReport, CostModel,
+                                Histograms, Planner)
 from repro.core.distributed import DistributedScan, make_data_mesh
 
 __all__ = [
@@ -21,6 +22,7 @@ __all__ = [
     "match_mask_np",
     "MDRQEngine", "ALL_METHODS", "BatchStats",
     "build_columnar_scan", "build_row_scan", "build_kdtree", "build_rstar",
-    "build_vafile", "CostModel", "Histograms", "Planner",
+    "build_vafile", "CalibrationFit", "CalibrationReport", "CostModel",
+    "Histograms", "Planner",
     "DistributedScan", "make_data_mesh",
 ]

@@ -9,6 +9,21 @@ partial result sets" becomes a no-op — the output mask inherits the input
 sharding — and the only collective in the system is an optional ``psum`` for
 global match counts. Load balancing is inherited from random object placement,
 exactly as in the paper.
+
+Batched execution (cross-device × multi-query): ``distributed_multi_mask`` /
+``distributed_multi_counts`` wrap the fused multi-query kernels
+(``kernels.multi_scan``) in the same shard_map — data sharded ``P(None,
+"data")``, the (m_pad, Q) query bounds replicated — so one collective launch
+answers a whole batch on every device at once. In count mode the per-device
+(Q,) partial counts reduce through a single ``psum`` and only O(Q) ints ever
+cross the collective *and* the host boundary. ``DistributedScan.query_batch``
+buckets the query axis to pow2 exactly like ``ColumnarScan`` so both engines
+share jit traces per batch-size bucket.
+
+Instrumentation: every entry point here is registered through
+``kernels.ops.counted`` and every device->host read goes through
+``ops.device_get`` — the distributed path pays the same launch/host-sync
+accounting the single-device ops do, so counter-based budget tests see it.
 """
 from __future__ import annotations
 
@@ -21,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import types as T
 from repro.kernels import ops
+from repro.kernels import multi_scan as _ms
 from repro.kernels import range_scan as _rs
 
 
@@ -76,8 +92,26 @@ def shard_columnar(mesh: Mesh, padded_cols: np.ndarray, tile_n: int = 1024) -> j
     return jax.device_put(jnp.asarray(padded_cols), sharding)
 
 
+def _local_scan(data_local, lo, up, *, tile_n: int, interpret: bool):
+    """One device's full scan of its object shard (backend-dispatched)."""
+    if ops.use_xla():
+        from repro.kernels import ref as _ref
+        return _ref.range_scan_ref(data_local, lo, up)
+    return _rs.range_scan_tiles(data_local, lo, up, tile_n=tile_n,
+                                interpret=interpret)
+
+
+def _local_multi_scan(data_local, lo, up, *, tile_n: int, interpret: bool):
+    """One device's fused multi-query scan of its shard -> (Q, n_local)."""
+    if ops.use_xla():
+        from repro.kernels import ref as _ref
+        return _ref.multi_scan_ref(data_local, lo, up)
+    return _ms.multi_scan_tiles(data_local, lo, up, tile_n=tile_n,
+                                interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("mesh", "tile_n", "interpret"))
-def distributed_mask(
+def _distributed_mask_jit(
     mesh: Mesh,
     data_sharded: jax.Array,
     qlo: jax.Array,
@@ -86,16 +120,12 @@ def distributed_mask(
     tile_n: int = 1024,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Sharded match mask: each device scans its own object shard."""
     if interpret is None:
         interpret = ops.default_interpret()
 
     def local_scan(data_local, lo, up):
-        if ops.use_xla():
-            from repro.kernels import ref as _ref
-            return _ref.range_scan_ref(data_local, lo, up)
-        return _rs.range_scan_tiles(data_local, lo, up, tile_n=tile_n,
-                                    interpret=interpret)
+        return _local_scan(data_local, lo, up, tile_n=tile_n,
+                           interpret=interpret)
 
     fn = shard_map_compat(
         local_scan,
@@ -106,8 +136,15 @@ def distributed_mask(
     return fn(data_sharded, qlo, qhi)
 
 
+distributed_mask = ops.counted(
+    "distributed_mask",
+    "Sharded single-query match mask: each device scans its own object shard "
+    "-> (n_pad,) int8, output sharded over 'data'.",
+)(_distributed_mask_jit)
+
+
 @functools.partial(jax.jit, static_argnames=("mesh", "tile_n", "interpret"))
-def distributed_count(
+def _distributed_count_jit(
     mesh: Mesh,
     data_sharded: jax.Array,
     qlo: jax.Array,
@@ -116,18 +153,12 @@ def distributed_count(
     tile_n: int = 1024,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Global match count — one psum over the data axis (the paper's result
-    concatenation reduced to its cheapest sufficient collective)."""
     if interpret is None:
         interpret = ops.default_interpret()
 
     def local_count(data_local, lo, up):
-        if ops.use_xla():
-            from repro.kernels import ref as _ref
-            mask = _ref.range_scan_ref(data_local, lo, up)
-        else:
-            mask = _rs.range_scan_tiles(data_local, lo, up, tile_n=tile_n,
-                                        interpret=interpret)
+        mask = _local_scan(data_local, lo, up, tile_n=tile_n,
+                           interpret=interpret)
         return jax.lax.psum(mask.astype(jnp.int32).sum(), "data")
 
     fn = shard_map_compat(
@@ -139,23 +170,113 @@ def distributed_count(
     return fn(data_sharded, qlo, qhi)
 
 
+distributed_count = ops.counted(
+    "distributed_count",
+    "Global single-query match count — one psum over the data axis (the "
+    "paper's result concatenation reduced to its cheapest sufficient "
+    "collective).",
+)(_distributed_count_jit)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "tile_n", "interpret"))
+def _distributed_multi_mask_jit(
+    mesh: Mesh,
+    data_sharded: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    tile_n: int = 1024,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = ops.default_interpret()
+
+    def local_multi(data_local, lo, up):
+        return _local_multi_scan(data_local, lo, up, tile_n=tile_n,
+                                 interpret=interpret)
+
+    fn = shard_map_compat(
+        local_multi,
+        mesh=mesh,
+        in_specs=(P(None, "data"), P(), P()),
+        out_specs=P(None, "data"),
+    )
+    return fn(data_sharded, lower, upper)
+
+
+distributed_multi_mask = ops.counted(
+    "distributed_multi_mask",
+    "Cross-device fused batch scan: every device evaluates the whole (m_pad, "
+    "Q) replicated query batch against its own object shard in one "
+    "collective launch -> (Q, n_pad) int8 masks sharded over objects.",
+)(_distributed_multi_mask_jit)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "tile_n", "interpret"))
+def _distributed_multi_counts_jit(
+    mesh: Mesh,
+    data_sharded: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    tile_n: int = 1024,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = ops.default_interpret()
+
+    def local_multi_counts(data_local, lo, up):
+        mask = _local_multi_scan(data_local, lo, up, tile_n=tile_n,
+                                 interpret=interpret)
+        # (Q,) partial counts per device; one psum concatenates the paper's
+        # partial result sets — only O(Q) ints cross the collective.
+        return jax.lax.psum(jnp.sum(mask != 0, axis=-1).astype(jnp.int32),
+                            "data")
+
+    fn = shard_map_compat(
+        local_multi_counts,
+        mesh=mesh,
+        in_specs=(P(None, "data"), P(), P()),
+        out_specs=P(),
+    )
+    return fn(data_sharded, lower, upper)
+
+
+distributed_multi_counts = ops.counted(
+    "distributed_multi_counts",
+    "Cross-device fused batch count: per-device (Q,) partial counts reduced "
+    "via one psum -> (Q,) int32 global match counts, replicated.",
+)(_distributed_multi_counts_jit)
+
+
 class DistributedScan:
-    """Horizontally partitioned scan over a device mesh (build-once facade)."""
+    """Horizontally partitioned scan over a device mesh (build-once facade).
+
+    Single-query (``mask`` / ``query`` / ``count``) and batched
+    (``mask_batch`` / ``query_batch`` / ``count_batch``) entry points mirror
+    ``ColumnarScan`` — batched calls are one collective launch and one host
+    sync per batch, with the same pow2 query-axis bucketing.
+    """
 
     def __init__(self, dataset: T.Dataset, mesh: Mesh | None = None, tile_n: int = 1024):
         self.mesh = mesh or make_data_mesh()
         self.tile_n = tile_n
-        n_dev = self.mesh.shape["data"]
+        self.n_devices = self.mesh.shape["data"]
         padded, self.m, self.n = ops.prepare_columnar(
-            dataset.cols, tile_n=tile_n * n_dev
+            dataset.cols, tile_n=tile_n * self.n_devices
         )
         self.m_pad = padded.shape[0]
         self.data = shard_columnar(self.mesh, padded, tile_n=tile_n)
 
+    @property
+    def nbytes_index(self) -> int:
+        return 0  # a scan needs no auxiliary structures (paper §8)
+
+    # -- single query ------------------------------------------------------
     def mask(self, q: T.RangeQuery) -> np.ndarray:
         qlo, qhi = ops.query_bounds_device(q, self.m_pad, self.data.dtype)
         out = distributed_mask(self.mesh, self.data, qlo, qhi, tile_n=self.tile_n)
-        return np.asarray(out)[: self.n] > 0
+        return ops.device_get(out)[: self.n] > 0
 
     def query(self, q: T.RangeQuery) -> np.ndarray:
         return np.nonzero(self.mask(q))[0].astype(np.int64)
@@ -164,4 +285,40 @@ class DistributedScan:
         qlo, qhi = ops.query_bounds_device(q, self.m_pad, self.data.dtype)
         total = distributed_count(self.mesh, self.data, qlo, qhi, tile_n=self.tile_n)
         # subtract sentinel padding matches (there are none: +inf never matches)
-        return int(total)
+        return int(ops.device_get(total))
+
+    # -- batched execution (one collective launch per batch) ---------------
+    def _as_batch(self, batch) -> T.QueryBatch:
+        if not isinstance(batch, T.QueryBatch):
+            batch = T.QueryBatch.from_queries(list(batch))
+        return batch
+
+    def mask_batch(self, batch) -> np.ndarray:
+        """(Q, n) bool match masks from one cross-device fused launch."""
+        from repro.core.scan import bucketed_batch_bounds
+        batch = self._as_batch(batch)
+        _, lo, up = bucketed_batch_bounds(batch, self.m_pad, self.data.dtype)
+        out = distributed_multi_mask(self.mesh, self.data, lo, up,
+                                     tile_n=self.tile_n)
+        return ops.device_get(out)[: len(batch), : self.n] > 0
+
+    def count_batch(self, batch) -> list[int]:
+        """Per-query global counts: one collective launch + one psum, so the
+        host (and the collective) only ever see (Q,) ints."""
+        from repro.core.scan import bucketed_batch_bounds
+        batch = self._as_batch(batch)
+        _, lo, up = bucketed_batch_bounds(batch, self.m_pad, self.data.dtype)
+        counts = distributed_multi_counts(self.mesh, self.data, lo, up,
+                                          tile_n=self.tile_n)
+        return [int(c) for c in ops.device_get(counts)[: len(batch)]]
+
+    def query_batch(self, batch, mode: str = "ids"
+                    ) -> list[np.ndarray] | list[int]:
+        if mode not in T.RESULT_MODES:
+            raise ValueError(f"unknown mode {mode!r}; options: {T.RESULT_MODES}")
+        if mode == "count":
+            return self.count_batch(batch)
+        batch = self._as_batch(batch)
+        masks = self.mask_batch(batch)
+        return [np.nonzero(masks[k])[0].astype(np.int64)
+                for k in range(len(batch))]

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core import types as T
 from repro.core import scan as scan_mod
+from repro.core.distributed import DistributedScan
 from repro.core.kdtree import build_kdtree
 from repro.core.rstar import build_rstar
 from repro.core.vafile import build_vafile
@@ -76,10 +77,20 @@ class MDRQEngine:
         structures: tuple[str, ...] = ("scan", "kdtree", "rstar", "vafile"),
         tile_n: int = 1024,
         rowscan: bool = False,
+        mesh=None,
     ):
         self.dataset = dataset
         self.tile_n = tile_n
-        self.columnar = scan_mod.build_columnar_scan(dataset, tile_n=tile_n)
+        # With a mesh, "scan" executes as the cross-device batched scan: data
+        # sharded over the 'data' axis, one collective launch per batch
+        # (horizontal partitioning, §3.1). Other paths stay single-device —
+        # and the single-device columnar copy is then built lazily, so a
+        # meshed engine that never routes through them doesn't hold the
+        # dataset on device twice.
+        self.dist = (DistributedScan(dataset, mesh=mesh, tile_n=tile_n)
+                     if mesh is not None else None)
+        self._columnar = (None if mesh is not None
+                          else scan_mod.build_columnar_scan(dataset, tile_n=tile_n))
         self.rowscan = scan_mod.build_row_scan(dataset) if rowscan else None
         self.kdtree = build_kdtree(dataset, tile_n=tile_n) if "kdtree" in structures else None
         self.rstar = build_rstar(dataset, tile_n=tile_n) if "rstar" in structures else None
@@ -87,17 +98,31 @@ class MDRQEngine:
         self.hist = Histograms.build(dataset)
         # Every built structure must be plannable, or "auto" silently never
         # chooses it (the seed omitted rstar here — a structure that was paid
-        # for at build time but could not win a single query).
-        available = ["scan", "scan_vertical"]
+        # for at build time but could not win a single query). On a meshed
+        # engine the vertical scan is *not* plannable: it executes on the
+        # single-device columnar copy, so an "auto" choice of it would
+        # lazily re-place the full dataset on one device — the exact
+        # duplication sharding exists to avoid. Explicit
+        # ``method="scan_vertical"`` remains an opt-in.
+        available = ["scan"] if self.dist is not None else ["scan", "scan_vertical"]
         for name in ("kdtree", "rstar", "vafile"):
             if getattr(self, name) is not None:
                 available.append(name)
         self.planner = Planner(
-            self.hist, CostModel(n=dataset.n, m=dataset.m, tile_n=tile_n),
+            self.hist, CostModel(n=dataset.n, m=dataset.m, tile_n=tile_n,
+                                 n_devices=(self.dist.n_devices
+                                            if self.dist is not None else 1)),
             available=tuple(available),
         )
         self.last_stats: Optional[QueryStats] = None
         self.last_batch_stats: Optional[BatchStats] = None
+
+    @property
+    def columnar(self) -> scan_mod.ColumnarScan:
+        if self._columnar is None:
+            self._columnar = scan_mod.build_columnar_scan(self.dataset,
+                                                          tile_n=self.tile_n)
+        return self._columnar
 
     def memory_report(self) -> dict[str, int]:
         """Bytes of auxiliary structures per method (paper §7.2 comparison)."""
@@ -193,6 +218,8 @@ class MDRQEngine:
     def _dispatch_batch(self, batch: T.QueryBatch, method: str,
                         mode: str = "ids") -> list:
         if method == "scan":
+            if self.dist is not None:
+                return self.dist.query_batch(batch, mode=mode)
             return self.columnar.query_batch(batch, mode=mode)
         if method == "scan_vertical":
             return self.columnar.query_batch(batch, partial=True, mode=mode)
@@ -210,6 +237,8 @@ class MDRQEngine:
 
     def _dispatch(self, q: T.RangeQuery, method: str) -> np.ndarray:
         if method == "scan":
+            if self.dist is not None:
+                return self.dist.query(q)
             return self.columnar.query(q)
         if method == "scan_vertical":
             return self.columnar.query_partial(q)
@@ -235,6 +264,8 @@ class MDRQEngine:
         """Count-only dispatch: every access path sums its match masks on
         device instead of materializing an id array."""
         if method == "scan":
+            if self.dist is not None:
+                return self.dist.count(q)
             return self.columnar.count(q)
         if method == "scan_vertical":
             return self.columnar.count_partial(q)

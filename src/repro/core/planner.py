@@ -113,12 +113,17 @@ class CostModel:
     m: int
     tile_n: int = 1024
     bytes_per_val: int = 4
+    # Devices the scan shards over (horizontal partitioning, §3.1 — the
+    # paper's thread count t mapped to a mesh). Streamed bytes and the VPU
+    # compute floor both divide by it; indexes stay single-device.
+    n_devices: int = 1
     # machine constants — defaults in v5e roofline units (s); calibrate() refits.
     sec_per_byte: float = 1.0 / 819e9
     dispatch_overhead: float = 2e-6
     host_sync_overhead: float = 20e-6  # device->host->device visit-list turn
     visit_bw_discount: float = 0.6     # scattered tile DMA vs streaming scan
     sec_per_cmp: float = 2.5e-13       # VPU compare+AND per element (~4e12/s)
+    collective_overhead: float = 5e-6  # per-launch shard_map dispatch + psum tax
 
     def _bytes_cost(self, nbytes: float, dispatches: float = 1.0,
                     batch: int = 1) -> float:
@@ -149,18 +154,34 @@ class CostModel:
     # fused scans re-use each HBM data tile for all queries of the batch, so
     # streamed bytes also divide by the batch — down to the VPU compute floor
     # (``sec_per_cmp``), at which point the fused scan is compute-bound.
-    def cost_scan(self, q: T.RangeQuery, batch: int = 1) -> float:
-        elems = self.n * self.m
-        stream = elems * self.bytes_per_val * self.sec_per_byte / max(batch, 1)
-        return max(stream, elems * self.sec_per_cmp) \
+    def _scan_cost(self, elems: float, batch: int, n_devices: int | None) -> float:
+        """Shared scan cost shape: streamed bytes (amortized over the fused
+        batch, sharded over devices) floored by the per-device VPU compute
+        rate, plus the per-launch taxes. Multi-device launches additionally
+        pay one collective (shard_map dispatch + count psum) per launch —
+        also amortized over the batch."""
+        d = max(n_devices if n_devices is not None else self.n_devices, 1)
+        local = elems / d
+        stream = local * self.bytes_per_val * self.sec_per_byte / max(batch, 1)
+        cost = max(stream, local * self.sec_per_cmp) \
             + self.dispatch_overhead / max(batch, 1)
+        if d > 1:
+            cost += self.collective_overhead / max(batch, 1)
+        return cost
 
-    def cost_scan_vertical(self, q: T.RangeQuery, batch: int = 1) -> float:
+    def cost_scan(self, q: T.RangeQuery, batch: int = 1,
+                  n_devices: int | None = None) -> float:
+        return self._scan_cost(self.n * self.m, batch, n_devices)
+
+    def cost_scan_vertical(self, q: T.RangeQuery, batch: int = 1,
+                           n_devices: int | None = None) -> float:
+        # The distributed path implements only the full fused scan, so the
+        # vertical scan executes on one device regardless of the mesh —
+        # default to 1 here (not ``self.n_devices``) so the planner's cost
+        # matches what actually runs; pass n_devices for what-if analysis.
         mq = max(q.n_queried_dims, 1)
-        elems = self.n * mq
-        stream = elems * self.bytes_per_val * self.sec_per_byte / max(batch, 1)
-        return max(stream, elems * self.sec_per_cmp) \
-            + self.dispatch_overhead / max(batch, 1)
+        return self._scan_cost(self.n * mq, batch,
+                               n_devices if n_devices is not None else 1)
 
     def cost_tree(self, q: T.RangeQuery, sel: float, batch: int = 1) -> float:
         n_leaves = -(-self.n // self.tile_n)
@@ -197,6 +218,35 @@ class Plan:
     method: str
     est_selectivity: float
     costs: dict[str, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationFit:
+    """Outcome of fitting one machine constant."""
+
+    constant: str
+    fitted: float    # raw lstsq coefficient, whatever its sign
+    accepted: bool   # written into the model only when positive
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationReport:
+    """What ``Planner.calibrate`` did — a failed fit is distinguishable from
+    a successful one (the seed silently kept stale constants on rejection)."""
+
+    n_samples: int
+    methods: tuple[str, ...]       # distinct access paths that contributed
+    fits: tuple[CalibrationFit, ...]
+    rms_rel_err: float             # relative residual of the lstsq fit
+
+    @property
+    def accepted(self) -> dict[str, bool]:
+        return {f.constant: f.accepted for f in self.fits}
+
+    @property
+    def ok(self) -> bool:
+        return bool(self.fits) and all(f.accepted for f in self.fits)
 
 
 class Planner:
@@ -240,7 +290,8 @@ class Planner:
 
     def break_even_selectivity(self, m_q: Optional[int] = None,
                                batch_size: int = 1,
-                               index_path: str = "tree") -> float:
+                               index_path: str = "tree",
+                               n_devices: Optional[int] = None) -> float:
         """Selectivity where the index (``index_path``) stops beating the scan.
 
         Bisects the cost model over complete-match queries — reproduces the
@@ -252,6 +303,13 @@ class Planner:
         machine-and-batch-size-dependent result the paper's single-query
         analysis (§8) cannot see. ``index_path="vafile"`` bisects the (now
         fully batch-fused) VA-file cost instead of the tree cost.
+
+        ``n_devices`` adds the cross-device axis: the scan's streamed bytes
+        (and compute floor) divide over the mesh while the indexes stay
+        single-device, so every added device pushes the break-even further
+        down — horizontal partitioning (§3.1) extends the paper's "scans win
+        below ~1%" conclusion device-linearly, minus the per-launch
+        collective tax.
         """
         mq = m_q or self.model.m
         lo_s, hi_s = 1e-8, 1.0
@@ -262,7 +320,8 @@ class Planner:
                 idx_cost = self.model.cost_vafile(q, self.hist, batch=batch_size)
             else:
                 idx_cost = self.model.cost_tree(q, sel, batch=batch_size)
-            return idx_cost < self.model.cost_scan(q, batch=batch_size)
+            return idx_cost < self.model.cost_scan(q, batch=batch_size,
+                                                   n_devices=n_devices)
 
         if not tree_wins(lo_s):
             return 0.0
@@ -276,19 +335,46 @@ class Planner:
                 hi_s = mid
         return float(np.sqrt(lo_s * hi_s))
 
-    def calibrate(self, samples: list[tuple[str, float, float]]) -> None:
+    def calibrate(self, samples: list[tuple[str, float, float]]
+                  ) -> "CalibrationReport":
         """Refit (sec_per_byte, dispatch_overhead) from measured runs.
 
         Args:
-          samples: (method, modeled_bytes, measured_seconds) triples.
+          samples: (method, modeled_bytes, measured_seconds) triples. The
+            method names are recorded in the report so callers can see which
+            access paths backed the fit.
+
+        Returns:
+          A ``CalibrationReport``: each constant is written into the model
+          only when its fitted value is positive, and the report says per
+          constant whether the fit was accepted — a rejected fit keeps the
+          previous constant *visibly* instead of silently looking like a
+          successful calibration.
         """
+        if not samples:
+            return CalibrationReport(n_samples=0, methods=(), fits=(),
+                                     rms_rel_err=float("nan"))
         A = np.array([[b, 1.0] for _, b, _ in samples])
         y = np.array([t for _, _, t in samples])
         coef, *_ = np.linalg.lstsq(A, y, rcond=None)
-        if coef[0] > 0:
-            self.model.sec_per_byte = float(coef[0])
-        if coef[1] > 0:
-            self.model.dispatch_overhead = float(coef[1])
+        resid = (A @ coef - y) / np.maximum(np.abs(y), 1e-30)
+        fits = []
+        for name, val in (("sec_per_byte", float(coef[0])),
+                          ("dispatch_overhead", float(coef[1]))):
+            accepted = val > 0.0
+            kept = getattr(self.model, name)
+            if accepted:
+                setattr(self.model, name, val)
+            fits.append(CalibrationFit(
+                constant=name, fitted=val, accepted=accepted,
+                reason="fit accepted" if accepted else
+                f"non-positive fit {val:.3e}; keeping {kept:.3e}"))
+        return CalibrationReport(
+            n_samples=len(samples),
+            methods=tuple(sorted({m for m, _, _ in samples})),
+            fits=tuple(fits),
+            rms_rel_err=float(np.sqrt(np.mean(resid ** 2))),
+        )
 
 
 def _synthetic_query(m: int, mq: int, sel: float) -> T.RangeQuery:

@@ -35,6 +35,20 @@ from repro.core import types as T
 from repro.kernels import ops
 
 
+def bucketed_batch_bounds(batch: T.QueryBatch, m_pad: int, dtype
+                          ) -> tuple[int, jax.Array, jax.Array]:
+    """(q_pad, lo, up): pow2-bucketed device bounds for one fused batch launch.
+
+    The query axis rounds up to the next power of two so arbitrary batch sizes
+    hit a bounded set of jit traces; padding columns are match-all and their
+    output rows are dropped by the caller. Shared by ``ColumnarScan`` and
+    ``DistributedScan`` so both batch paths bucket identically.
+    """
+    q_pad = T.next_pow2(len(batch))
+    lo, up = ops.batch_bounds_device(batch, m_pad, dtype, q_pad=q_pad)
+    return q_pad, lo, up
+
+
 @dataclasses.dataclass
 class ColumnarScan:
     """Full-scan engine over dimension-major data."""
@@ -105,9 +119,8 @@ class ColumnarScan:
     def _mask_batch_device(self, batch: T.QueryBatch, partial: bool) -> jax.Array:
         """(q_pad, n_pad) device masks from one fused launch (rows >= Q and
         columns >= n are padding; object padding never matches)."""
-        q_pad = T.next_pow2(len(batch))
-        lo, up = ops.batch_bounds_device(batch, self.data_dev.shape[0],
-                                         self.data_dev.dtype, q_pad=q_pad)
+        q_pad, lo, up = bucketed_batch_bounds(batch, self.data_dev.shape[0],
+                                              self.data_dev.dtype)
         if partial:
             dim_ids = batch.padded_dim_ids(q_pad)
             return ops.multi_range_scan_vertical(

@@ -138,21 +138,22 @@ class QueryBatch:
         """(Q, m) bool — True where a dimension is actually constrained."""
         return ~(np.isneginf(self.lower) & np.isposinf(self.upper))
 
-    def bounds_columnar(self, m_pad: int, q_pad: int | None = None
-                        ) -> tuple[np.ndarray, np.ndarray]:
+    def bounds_columnar(self, m_pad: int, q_pad: int | None = None,
+                        dtype=np.float32) -> tuple[np.ndarray, np.ndarray]:
         """Query-minor (m_pad, q_pad or Q) finite bounds for the fused kernels.
 
-        Padding dims (and unconstrained dims) carry the dtype extrema, i.e.
-        match-all against any finite value; padding *queries* (columns beyond
-        Q, used to round the batch to a pow2 jit bucket) are match-all too —
-        callers drop their output rows.
+        Padding dims (and unconstrained dims) carry the extrema of ``dtype``
+        (the dtype the device comparison runs in), i.e. match-all against any
+        finite value; padding *queries* (columns beyond Q, used to round the
+        batch to a pow2 jit bucket) are match-all too — callers drop their
+        output rows.
         """
         q_n = q_pad or len(self)
         lo = np.full((m_pad, q_n), NEG_INF, np.float32)
         up = np.full((m_pad, q_n), POS_INF, np.float32)
         lo[: self.m, : len(self)] = self.lower.T
         up[: self.m, : len(self)] = self.upper.T
-        return finite_query_bounds(lo, up)
+        return finite_query_bounds(lo, up, dtype=dtype)
 
     def padded_dim_ids(self, q_pad: int | None = None) -> np.ndarray:
         """(q_pad or Q, D_max) int32 constrained-dim ids for the batched
@@ -260,8 +261,22 @@ def padded_query_bounds(
 
 
 def finite_query_bounds(lo: np.ndarray, up: np.ndarray, dtype=np.float32):
-    """Replace +-inf with the dtype's finite extrema (bf16 compare safety)."""
-    fin = np.finfo(np.dtype(dtype) if dtype != jnp.bfloat16 else np.float32)
-    lo = np.where(np.isneginf(lo), fin.min, lo).astype(np.float32)
-    up = np.where(np.isposinf(up), fin.max, up).astype(np.float32)
+    """Replace +-inf with the *target device dtype's* finite extrema.
+
+    ``dtype`` must be the dtype the comparison actually runs in: substituting
+    float32 extrema under a bfloat16 cast rounds ``finfo(f32).max`` back to
+    ``+inf``, so the +inf object-padding sentinels *match* and every
+    padded-axis reduction (``mask_counts``, ``visit_counts``, psum counts)
+    overcounts. ``jnp.finfo`` understands bfloat16 (ml_dtypes); extrema are
+    additionally clamped into float32's finite range because these carrier
+    arrays are float32 — for a wider dtype (f64 under jax x64) the f32
+    extrema are what survive the round trip finite, and all dataset values
+    are f32-representable (``Dataset`` stores float32).
+    """
+    fin = jnp.finfo(dtype)
+    f32 = np.finfo(np.float32)
+    neg = max(float(fin.min), float(f32.min))
+    pos = min(float(fin.max), float(f32.max))
+    lo = np.where(np.isneginf(lo), neg, lo).astype(np.float32)
+    up = np.where(np.isposinf(up), pos, up).astype(np.float32)
     return lo, up

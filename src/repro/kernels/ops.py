@@ -85,10 +85,12 @@ def device_get(x) -> np.ndarray:
     return np.asarray(x)
 
 
-def _counted(name: str, doc: str):
-    """Build the public op: bump the named launch counter, delegate to the
+def counted(name: str, doc: str):
+    """Build a public op: bump the named launch counter, delegate to the
     jitted implementation. One definition keeps every op in the accounting —
-    a hand-written wrapper that forgets the bump silently escapes it."""
+    a hand-written wrapper that forgets the bump silently escapes it. Other
+    modules that own jitted entry points (e.g. ``core.distributed``) register
+    them through this same hook so no launch path escapes the counters."""
     def deco(jit_fn):
         def wrapper(*args, **kwargs):
             _bump(name)
@@ -98,6 +100,9 @@ def _counted(name: str, doc: str):
         wrapper.__wrapped__ = jit_fn
         return wrapper
     return deco
+
+
+_counted = counted  # historical spelling used by the in-module registrations
 
 
 def prepare_columnar(
@@ -117,9 +122,14 @@ def prepare_columnar(
 
 
 def query_bounds_device(q: T.RangeQuery, m_pad: int, dtype) -> tuple[jax.Array, jax.Array]:
-    """(m_pad, 1) finite device bounds for a query (pad rows = match-all)."""
+    """(m_pad, 1) finite device bounds for a query (pad rows = match-all).
+
+    ``dtype`` threads into the match-all substitution so the extrema stay
+    finite *in the comparison dtype* (float32 extrema round to +inf under a
+    bfloat16 cast and would match the +inf padding sentinels).
+    """
     lo, up = T.padded_query_bounds(q, m_pad)
-    lo, up = T.finite_query_bounds(lo, up)
+    lo, up = T.finite_query_bounds(lo, up, dtype=dtype)
     lo_d = jnp.asarray(lo, dtype=dtype).reshape(-1, 1)
     up_d = jnp.asarray(up, dtype=dtype).reshape(-1, 1)
     return lo_d, up_d
@@ -130,11 +140,12 @@ def batch_bounds_device(batch, m_pad: int, dtype,
     """(m_pad, q_pad or Q) finite device bounds for a QueryBatch.
 
     Pad rows — and padding query columns beyond Q when ``q_pad`` rounds the
-    batch to a jit bucket — are match-all; callers drop their output rows.
+    batch to a jit bucket — are match-all in ``dtype``'s finite extrema;
+    callers drop their output rows.
     """
     if not isinstance(batch, T.QueryBatch):
         batch = T.QueryBatch.from_queries(list(batch))
-    lo, up = batch.bounds_columnar(m_pad, q_pad)
+    lo, up = batch.bounds_columnar(m_pad, q_pad, dtype=dtype)
     return jnp.asarray(lo, dtype=dtype), jnp.asarray(up, dtype=dtype)
 
 

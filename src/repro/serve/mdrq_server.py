@@ -10,10 +10,11 @@ pending window and flush as one fused batch when either trigger fires —
   * the oldest pending query has waited ``max_wait_s`` (latency bound).
 
 The design is deliberately synchronous (no threads): ``submit`` returns a
-``Ticket`` immediately, deadlines are checked on every submit, and
-``Ticket.result()`` forces a flush of whatever is pending — so behaviour is
-deterministic under test while mirroring the admission loop a real deployment
-would run. Throughput (queries/sec — the primary metric of the multi-query
+``Ticket`` immediately, deadlines are checked on every submit — and on
+``poll()``, the idle-stream flush path an admission loop calls between
+arrivals — and ``Ticket.result()`` forces a flush of whatever is pending, so
+behaviour is deterministic under test while mirroring the admission loop a
+real deployment would run. Throughput (queries/sec — the primary metric of the multi-query
 literature, e.g. "Learning Multi-dimensional Indexes") accumulates in
 ``ServerStats``.
 
@@ -111,6 +112,21 @@ class MDRQServer:
             self.flush()
         return ticket
 
+    def poll(self) -> int:
+        """Deadline check for an *idle* stream: flush iff the oldest pending
+        query has waited past ``max_wait_s``.
+
+        The latency bound otherwise only fires on the next ``submit`` — with
+        no further arrivals, pending queries would sit past their deadline
+        with no flush path short of ``Ticket.result()``. An admission loop
+        calls this on its idle ticks. Returns the flushed batch size (0 when
+        nothing is due).
+        """
+        if (self._pending
+                and time.perf_counter() - self._oldest_t >= self.max_wait_s):
+            return self.flush()
+        return 0
+
     def flush(self) -> int:
         """Execute everything pending as one batch; returns its size."""
         if not self._pending:
@@ -143,6 +159,12 @@ class MDRQServer:
                   ) -> list[Union[np.ndarray, int]]:
         """Drive a whole workload through the batching window; results come
         back positionally aligned with the input (benchmark convenience)."""
-        tickets = [self.submit(q) for q in queries]
+        tickets = []
+        for q in queries:
+            tickets.append(self.submit(q))
+            # the admission-loop shape: poll between arrivals. submit's own
+            # deadline check makes this a near-no-op here, but a real loop
+            # with gaps between arrivals relies on exactly this call site.
+            self.poll()
         self.flush()
         return [t.result() for t in tickets]

@@ -116,3 +116,33 @@ def test_padding_objects_never_match():
     lo, up = ops.query_bounds_device(q, padded.shape[0], jnp.float32)
     out = np.asarray(ops.range_scan(jnp.asarray(padded), lo, up))
     assert out[:n0].all() and not out[n0:].any()
+
+
+def test_finite_bounds_wider_dtype_stays_finite():
+    """A wider comparison dtype (f64 under jax x64) must not overflow the
+    float32 carrier arrays back to +-inf — extrema clamp to f32's range."""
+    inf = np.full((4, 1), np.inf, np.float32)
+    lo, up = T.finite_query_bounds(-inf, inf, dtype=np.float64)
+    assert np.isfinite(lo).all() and np.isfinite(up).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_finite_bounds_respect_device_dtype(dtype):
+    """Match-all bounds must stay finite *in the comparison dtype*: float32
+    extrema round to +-inf under a bfloat16 cast, so the +inf object-padding
+    sentinels would match and every padded-axis count reduction (mask_counts,
+    visit_counts, distributed psum) would overcount."""
+    inf = np.full((8, 1), np.inf, np.float32)
+    lo, up = T.finite_query_bounds(-inf, inf, dtype=dtype)
+    assert np.isfinite(np.asarray(jnp.asarray(lo, dtype), np.float32)).all()
+    assert np.isfinite(np.asarray(jnp.asarray(up, dtype), np.float32)).all()
+
+    cols = np.random.default_rng(5).random((3, 100)).astype(np.float32)
+    padded, _, n0 = ops.prepare_columnar(cols)
+    data = jnp.asarray(padded, dtype)
+    q_all = T.RangeQuery.partial(3, {})
+    qlo, qhi = ops.query_bounds_device(q_all, padded.shape[0], dtype)
+    mask = ops.range_scan(data, qlo, qhi)
+    # on-device count sees exactly the real objects, never the sentinels
+    assert int(np.asarray(ops.mask_counts(mask))) == n0
+    assert not np.asarray(mask)[n0:].any()

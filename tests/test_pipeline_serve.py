@@ -113,6 +113,32 @@ def test_server_survives_engine_failure_and_rejects_bad_dims():
                                   match_ids_np(eng.dataset.cols, q))
 
 
+def test_server_poll_flushes_idle_stream():
+    """An idle stream must have a flush path once the latency bound passes:
+    ``poll()`` flushes iff the oldest pending query exceeded ``max_wait_s``
+    (the seed's bound only fired on the *next* submit)."""
+    from repro.core import Dataset, MDRQEngine, RangeQuery
+    from repro.serve.mdrq_server import MDRQServer
+
+    rng = np.random.default_rng(6)
+    ds = Dataset(rng.random((3, 2048), dtype=np.float32))
+    eng = MDRQEngine(ds, structures=("scan",), tile_n=512)
+    srv = MDRQServer(eng, max_batch=64, max_wait_s=60.0)
+    assert srv.poll() == 0  # nothing pending: no-op
+
+    q = RangeQuery.partial(3, {0: (0.2, 0.8)})
+    ticket = srv.submit(q)
+    assert srv.poll() == 0 and srv.n_pending == 1  # deadline far away
+    assert not ticket._done
+
+    srv.max_wait_s = 0.0  # deadline has now passed for the idle window
+    assert srv.poll() == 1  # flushed without a submit or result() call
+    assert srv.n_pending == 0 and ticket._done
+    np.testing.assert_array_equal(ticket.result(),
+                                  match_ids_np(ds.cols, q))
+    assert srv.stats.n_batches == 1
+
+
 def test_server_count_mode():
     """A count-mode serving window resolves tickets to device-reduced ints."""
     from repro.core import Dataset, MDRQEngine, RangeQuery

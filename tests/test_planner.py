@@ -124,5 +124,52 @@ def test_calibration_refits_constants(uni5):
     b = uni5.n * 5 * 4
     samples = [("scan", b, b * 2 * p.model.sec_per_byte + 5e-6)] * 3
     old = p.model.sec_per_byte
-    p.calibrate(samples)
+    rep = p.calibrate(samples)
     assert p.model.sec_per_byte > old * 1.5
+    assert rep.n_samples == 3 and rep.methods == ("scan",)
+    assert rep.accepted["sec_per_byte"]
+
+
+def test_calibration_reports_rejected_fit(uni5):
+    """A failed fit must be distinguishable from a successful one: rejected
+    constants keep their previous value and the report says so (the seed
+    silently kept stale constants)."""
+    hist = Histograms.build(uni5)
+    p = Planner(hist, CostModel(n=uni5.n, m=5))
+    old_rate = p.model.sec_per_byte
+    # decreasing time with increasing bytes -> negative sec_per_byte fit
+    # (the positive intercept still fits dispatch_overhead — partial accept)
+    samples = [("scan", 1e6, 2e-3), ("vafile", 2e6, 1e-3)]
+    rep = p.calibrate(samples)
+    assert not rep.accepted["sec_per_byte"]
+    assert rep.accepted["dispatch_overhead"]
+    assert not rep.ok
+    assert p.model.sec_per_byte == old_rate          # stale value kept, visibly
+    assert rep.methods == ("scan", "vafile")         # who backed the fit
+    fit = {f.constant: f for f in rep.fits}["sec_per_byte"]
+    assert fit.fitted < 0 and "keeping" in fit.reason
+    # empty calibration is a no-op with an empty report
+    before = (p.model.sec_per_byte, p.model.dispatch_overhead)
+    rep0 = p.calibrate([])
+    assert rep0.n_samples == 0 and not rep0.ok
+    assert (p.model.sec_per_byte, p.model.dispatch_overhead) == before
+
+
+def test_break_even_drops_with_devices(uni5):
+    """Sharding the scan over d devices divides its streamed bytes while the
+    indexes stay single-device, so the break-even selectivity must fall
+    monotonically with d — the device axis of the paper's §8 conclusion."""
+    hist = Histograms.build(uni5)
+    p = Planner(hist, CostModel(n=10_000_000, m=5))
+    bes = [p.break_even_selectivity(n_devices=d) for d in (1, 2, 4, 8)]
+    assert bes[0] > 0
+    assert all(a > b for a, b in zip(bes, bes[1:])), bes
+    # n_devices=1 is exactly the legacy result
+    assert bes[0] == p.break_even_selectivity()
+    # the model default picks up an engine-provided device count
+    pd = Planner(hist, CostModel(n=10_000_000, m=5, n_devices=8))
+    q = RangeQuery.complete([0.0] * 5, [0.5] * 5)
+    assert pd.model.cost_scan(q) < p.model.cost_scan(q)
+    # ... and the collective tax keeps multi-device scans from being a free
+    # lunch at batch=1: d=2 costs more than half of d=1
+    assert p.model.cost_scan(q, n_devices=2) > p.model.cost_scan(q) / 2
