@@ -35,13 +35,20 @@ BATCH_SIZES = (1, 8, 32, 128)
 
 def _throughput(eng, queries, batch: int, method: str = "auto",
                 mode: str = "ids"):
-    """(qps, whole-workload method_counts) through a fresh serving window."""
+    """(qps, whole-workload ServerStats) through a fresh serving window."""
     server = MDRQServer(eng, max_batch=batch, max_wait_s=float("inf"),
                         method=method, mode=mode)
     server.serve_all(queries[: 2 * batch])  # warmup (jit + retrace buckets)
     server.stats = type(server.stats)()
     server.serve_all(queries)
-    return server.stats.qps, server.stats.method_counts
+    return server.stats.qps, server.stats
+
+
+def _plan_us(stats) -> float:
+    """Planning microseconds per query (BatchStats.plan_seconds, aggregated
+    by the server) — isolates the vectorized fixpoint planner's cost from
+    kernel time in every throughput row."""
+    return 1e6 * stats.plan_seconds / max(stats.n_queries, 1)
 
 
 def _workload(quick: bool):
@@ -59,19 +66,21 @@ def run(quick: bool = True) -> None:
     # Mixed workload (all 8 templates interleaved) across batch sizes.
     base = None
     for b in BATCH_SIZES:
-        r, _ = _throughput(eng, mixed, b)
+        r, stats = _throughput(eng, mixed, b)
         base = base or r
         emit_row(f"throughput/mixed/B{b}", 1e6 / r,
-                 f"qps={r:.1f};speedup_vs_B1={r / base:.2f}x")
+                 f"qps={r:.1f};speedup_vs_B1={r / base:.2f}x;"
+                 f"plan_us_per_q={_plan_us(stats):.1f}")
 
     # Per-template mixes at the largest batch: which access path carries the
     # throughput for each selectivity band.
     rng = np.random.default_rng(3)
     for k in (1, 4, 8):
         queries = [gmrqb.template(k, rng, eng.dataset) for _ in range(n_queries)]
-        r, counts = _throughput(eng, queries, BATCH_SIZES[-1])
+        r, stats = _throughput(eng, queries, BATCH_SIZES[-1])
         emit_row(f"throughput/T{k}/B{BATCH_SIZES[-1]}", 1e6 / r,
-                 f"qps={r:.1f};buckets={'+'.join(sorted(counts))}")
+                 f"qps={r:.1f};buckets={'+'.join(sorted(stats.method_counts))};"
+                 f"plan_us_per_q={_plan_us(stats):.1f}")
 
     # Fixed-method sweep: isolates the fused-kernel win from planner choices.
     for meth in ("scan", "scan_vertical"):

@@ -2,27 +2,30 @@
 
 Public API:
   * types: ``RangeQuery``, ``Dataset`` + numpy oracles
-  * engines: ``MDRQEngine`` (facade), ``build_columnar_scan``, ``build_kdtree``,
-    ``build_rstar``, ``build_vafile``, ``DistributedScan``
-  * planning: ``Planner``, ``Histograms``, ``CostModel``
+  * engines: ``MDRQEngine`` (facade/registry), ``build_columnar_scan``,
+    ``build_kdtree``, ``build_rstar``, ``build_vafile``, ``DistributedScan``
+  * access-path layer: ``AccessPath`` protocol + adapters (``core.paths``)
+  * planning: ``Planner``, ``Histograms``, ``CostModel``, ``BatchPlan``
 """
 from repro.core.types import (Dataset, QueryBatch, RangeQuery, RESULT_MODES,
-                              match_ids_np, match_mask_np)
+                              match_ids_np, match_mask_np, validate_mode)
 from repro.core.engine import MDRQEngine, ALL_METHODS, BatchStats
+from repro.core.paths import AccessPath, PerQueryPath, PlanInputs
 from repro.core.scan import build_columnar_scan, build_row_scan
 from repro.core.kdtree import build_kdtree
 from repro.core.rstar import build_rstar
 from repro.core.vafile import build_vafile
-from repro.core.planner import (CalibrationFit, CalibrationReport, CostModel,
-                                Histograms, Planner)
+from repro.core.planner import (BatchPlan, CalibrationFit, CalibrationReport,
+                                CostModel, Histograms, Planner)
 from repro.core.distributed import DistributedScan, make_data_mesh
 
 __all__ = [
     "Dataset", "QueryBatch", "RangeQuery", "RESULT_MODES", "match_ids_np",
-    "match_mask_np",
+    "match_mask_np", "validate_mode",
     "MDRQEngine", "ALL_METHODS", "BatchStats",
+    "AccessPath", "PerQueryPath", "PlanInputs",
     "build_columnar_scan", "build_row_scan", "build_kdtree", "build_rstar",
-    "build_vafile", "CalibrationFit", "CalibrationReport", "CostModel",
-    "Histograms", "Planner",
+    "build_vafile", "BatchPlan", "CalibrationFit", "CalibrationReport",
+    "CostModel", "Histograms", "Planner",
     "DistributedScan", "make_data_mesh",
 ]

@@ -322,6 +322,7 @@ class BlockedIndex:
         visit masks to per-query counts on device instead of materializing id
         arrays (no host-side ``nonzero`` over result sets).
         """
+        T.validate_mode(mode)
         q_n = len(batch)
         q_pad = _next_pow2(q_n)  # pow2 query bucket bounds jit retraces
         qlo, qhi = batch.bounds_columnar(self.m, q_pad)

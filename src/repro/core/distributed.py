@@ -314,8 +314,7 @@ class DistributedScan:
 
     def query_batch(self, batch, mode: str = "ids"
                     ) -> list[np.ndarray] | list[int]:
-        if mode not in T.RESULT_MODES:
-            raise ValueError(f"unknown mode {mode!r}; options: {T.RESULT_MODES}")
+        T.validate_mode(mode)
         if mode == "count":
             return self.count_batch(batch)
         batch = self._as_batch(batch)

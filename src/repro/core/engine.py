@@ -1,18 +1,23 @@
-"""MDRQEngine — the unified facade over all access paths.
+"""MDRQEngine — a registry of access paths behind one query interface.
 
 Ingests a columnar dataset, builds the requested structures (scan is always
-available; kd-tree / R*-tree / VA-file optional), and answers range queries
-either with an explicitly chosen method or through the planner ("auto").
-This is the paper's experimental matrix (§7.1.3) as a composable component —
-and the interface the framework's data pipeline uses for sample selection.
+available; kd-tree / R*-tree / VA-file optional), wraps each in its
+``core.paths.AccessPath`` adapter, and answers range queries either with an
+explicitly named path or through the planner ("auto"). This is the paper's
+experimental matrix (§7.1.3) as a composable component — and the extension
+seam (DESIGN.md §6): all routing (single/batch, ids/count) is one lookup in
+the ``paths`` registry, so a new access path is ``register_path`` away from
+planning and execution, with no engine changes.
 
 Batched execution: ``query_batch`` takes a whole stream of queries at once —
 the inter-query-parallelism counterpart of the paper's intra-query parallel
-scans (§5). Queries bucket by planner-chosen access path (amortized costs),
-each bucket executes through one fused multi-query launch
+scans (§5). The planner's vectorized fixpoint (``Planner.plan_batch``)
+assigns every query an access path under *realized-bucket* cost
+amortization, each bucket executes through one fused multi-query launch
 (``kernels.multi_scan``), and results come back per query, identical to the
-single-query path. ``serve.mdrq_server`` wraps this into a throughput-
-oriented front end.
+single-query path. ``BatchStats`` splits ``plan_seconds`` from execution so
+the planning cost is visible to ``benchmarks.bench_throughput``;
+``serve.mdrq_server`` wraps the whole thing into a throughput front end.
 
 Result modes: ``mode="ids"`` (default) returns sorted matching id arrays;
 ``mode="count"`` returns per-query match counts reduced *on device* — the
@@ -29,12 +34,16 @@ import numpy as np
 
 from repro.core import types as T
 from repro.core import scan as scan_mod
+from repro.core import paths as paths_mod
 from repro.core.distributed import DistributedScan
 from repro.core.kdtree import build_kdtree
 from repro.core.rstar import build_rstar
 from repro.core.vafile import build_vafile
 from repro.core.planner import CostModel, Histograms, Planner
 
+# The built-in access paths (every name ``structures``/``rowscan``/``mesh``
+# can put in the registry). The registry itself — ``MDRQEngine.paths`` — is
+# the authoritative routing table; this tuple is the build vocabulary.
 ALL_METHODS = ("scan", "scan_vertical", "rowscan", "kdtree", "rstar", "vafile")
 RESULT_MODES = T.RESULT_MODES
 
@@ -49,12 +58,18 @@ class QueryStats:
 
 @dataclasses.dataclass
 class BatchStats:
-    """Aggregate statistics of one ``query_batch`` execution."""
+    """Aggregate statistics of one ``query_batch`` execution.
+
+    ``seconds`` is the whole wall time (planning + execution);
+    ``plan_seconds`` is the planning share of it, so the vectorized batch
+    planner's cost is measurable separately from kernel time.
+    """
 
     n_queries: int
     seconds: float
     method_counts: dict[str, int]
     n_results: int
+    plan_seconds: float = 0.0
 
     @property
     def qps(self) -> float:
@@ -96,23 +111,41 @@ class MDRQEngine:
         self.rstar = build_rstar(dataset, tile_n=tile_n) if "rstar" in structures else None
         self.vafile = build_vafile(dataset, tile_n=tile_n) if "vafile" in structures else None
         self.hist = Histograms.build(dataset)
-        # Every built structure must be plannable, or "auto" silently never
-        # chooses it (the seed omitted rstar here — a structure that was paid
-        # for at build time but could not win a single query). On a meshed
-        # engine the vertical scan is *not* plannable: it executes on the
-        # single-device columnar copy, so an "auto" choice of it would
+
+        # -- the access-path registry (build-from-spec) --------------------
+        # Every built structure registers as a plannable path, or "auto"
+        # silently never chooses it (the seed omitted rstar — a structure
+        # paid for at build time that could not win a single query). On a
+        # meshed engine the vertical scan is *not* plannable: it executes on
+        # the single-device columnar copy, so an "auto" choice of it would
         # lazily re-place the full dataset on one device — the exact
         # duplication sharding exists to avoid. Explicit
         # ``method="scan_vertical"`` remains an opt-in.
-        available = ["scan"] if self.dist is not None else ["scan", "scan_vertical"]
-        for name in ("kdtree", "rstar", "vafile"):
-            if getattr(self, name) is not None:
-                available.append(name)
+        self.paths: dict[str, paths_mod.AccessPath] = {}
+        if self.dist is not None:
+            self.register_path(paths_mod.DistributedScanPath(self.dist))
+            self.register_path(
+                paths_mod.VerticalScanPath(lambda: self.columnar,
+                                           plannable=False))
+        else:
+            self.register_path(paths_mod.ColumnarScanPath(self._columnar))
+            self.register_path(paths_mod.VerticalScanPath(lambda: self.columnar))
+        if self.rowscan is not None:
+            # no fused batch kernel for the row layout — per-query fallback
+            self.register_path(paths_mod.PerQueryPath("rowscan", self.rowscan))
+        for index in (self.kdtree, self.rstar):
+            if index is not None:
+                self.register_path(paths_mod.BlockedIndexPath(index))
+        if self.vafile is not None:
+            self.register_path(paths_mod.VAFilePath(self.vafile, self.hist))
+
+        # The planner shares the registry dict: paths registered later are
+        # planned without rebuilding anything.
         self.planner = Planner(
             self.hist, CostModel(n=dataset.n, m=dataset.m, tile_n=tile_n,
                                  n_devices=(self.dist.n_devices
                                             if self.dist is not None else 1)),
-            available=tuple(available),
+            paths=self.paths,
         )
         self.last_stats: Optional[QueryStats] = None
         self.last_batch_stats: Optional[BatchStats] = None
@@ -124,15 +157,38 @@ class MDRQEngine:
                                                           tile_n=self.tile_n)
         return self._columnar
 
+    # -- the registry ------------------------------------------------------
+    def register_path(self, path: paths_mod.AccessPath) -> None:
+        """Register (or replace) an access path under ``path.name``.
+
+        The planner sees it immediately (shared registry dict): a plannable
+        path is costed by ``explain``/``plan_batch`` and can win "auto"
+        queries; any registered path is addressable as ``method=name``.
+        """
+        for attr in ("name", "plannable", "owns_storage", "nbytes_index",
+                     "query", "count", "query_batch", "cost", "cost_batch"):
+            if not hasattr(path, attr):
+                raise TypeError(f"access path lacks {attr!r} "
+                                f"(see core.paths.AccessPath)")
+        self.paths[path.name] = path
+
+    def _path(self, method: str) -> paths_mod.AccessPath:
+        path = self.paths.get(method)
+        if path is None:
+            raise ValueError(f"unknown method {method!r}; "
+                             f"options: {tuple(self.paths)} or 'auto'")
+        return path
+
     def memory_report(self) -> dict[str, int]:
-        """Bytes of auxiliary structures per method (paper §7.2 comparison)."""
-        rep = {"data": self.dataset.nbytes, "scan": 0}
-        if self.kdtree is not None:
-            rep["kdtree"] = self.kdtree.nbytes_index
-        if self.rstar is not None:
-            rep["rstar"] = self.rstar.nbytes_index
-        if self.vafile is not None:
-            rep["vafile"] = self.vafile.nbytes_index
+        """Bytes of auxiliary structures per path (paper §7.2 comparison).
+
+        Storage-owning paths only: views over another path's arrays (the
+        vertical scan) would double-count.
+        """
+        rep = {"data": self.dataset.nbytes}
+        for name, path in self.paths.items():
+            if path.owns_storage:
+                rep[name] = path.nbytes_index
         return rep
 
     def query(self, q: T.RangeQuery, method: str = "auto",
@@ -141,19 +197,19 @@ class MDRQEngine:
         ``mode="count"``); records QueryStats."""
         if q.m != self.dataset.m:
             raise ValueError(f"query dims {q.m} != dataset dims {self.dataset.m}")
-        if mode not in RESULT_MODES:
-            raise ValueError(f"unknown mode {mode!r}; options: {RESULT_MODES}")
+        T.validate_mode(mode)
         if method == "auto":
             plan = self.planner.explain(q)
             method, est = plan.method, plan.est_selectivity
         else:
             est = self.planner.hist.selectivity(q)
+        path = self._path(method)
         t0 = time.perf_counter()
         if mode == "count":
-            res: Union[np.ndarray, int] = self._dispatch_count(q, method)
+            res: Union[np.ndarray, int] = path.count(q)
             n_res = int(res)
         else:
-            res = self._dispatch(q, method)
+            res = path.query(q)
             n_res = int(res.size)
         dt = time.perf_counter() - t0
         self.last_stats = QueryStats(method=method, seconds=dt,
@@ -169,15 +225,15 @@ class MDRQEngine:
         """Execute a batch of queries -> per-query sorted id arrays (or int
         counts with ``mode="count"``).
 
-        Queries are bucketed by access path (the planner's choice under
-        whole-batch cost amortization when ``method="auto"``, or the explicit
-        method for all) and each bucket runs through a single fused
-        multi-query launch. Results are positionally aligned with the input
-        and identical to per-query ``query`` calls; aggregate ``BatchStats``
-        land in ``last_batch_stats``.
+        Queries are bucketed by access path (the planner's vectorized
+        fixpoint under realized-bucket cost amortization when
+        ``method="auto"``, or the explicit method for all) and each bucket
+        runs through a single fused multi-query launch. Results are
+        positionally aligned with the input and identical to per-query
+        ``query`` calls; aggregate ``BatchStats`` land in
+        ``last_batch_stats`` with the planning share in ``plan_seconds``.
         """
-        if mode not in RESULT_MODES:
-            raise ValueError(f"unknown mode {mode!r}; options: {RESULT_MODES}")
+        T.validate_mode(mode)
         if isinstance(queries, T.QueryBatch):
             batch = queries
         else:
@@ -190,12 +246,11 @@ class MDRQEngine:
             raise ValueError(f"batch dims {batch.m} != dataset dims {self.dataset.m}")
         t0 = time.perf_counter()
         if method == "auto":
-            plans = self.planner.explain_batch(batch.queries)
-            methods = [p.method for p in plans]
-        elif method in ALL_METHODS:
-            methods = [method] * len(batch)
+            methods = self.planner.plan_batch(batch).methods
         else:
-            raise ValueError(f"unknown method {method!r}; options: {ALL_METHODS} or 'auto'")
+            self._path(method)  # raises on unknown names before any work
+            methods = [method] * len(batch)
+        plan_dt = time.perf_counter() - t0
 
         buckets: dict[str, list[int]] = {}
         for k, meth in enumerate(methods):
@@ -204,7 +259,7 @@ class MDRQEngine:
         results: list = [None] * len(batch)
         for meth, idxs in buckets.items():
             sub = T.QueryBatch(batch.lower[idxs], batch.upper[idxs])
-            for k, res in zip(idxs, self._dispatch_batch(sub, meth, mode)):
+            for k, res in zip(idxs, self._path(meth).query_batch(sub, mode=mode)):
                 results[k] = res
         dt = time.perf_counter() - t0
         self.last_batch_stats = BatchStats(
@@ -212,77 +267,6 @@ class MDRQEngine:
             seconds=dt,
             method_counts={m: len(ix) for m, ix in buckets.items()},
             n_results=_n_results(results),
+            plan_seconds=plan_dt,
         )
         return results
-
-    def _dispatch_batch(self, batch: T.QueryBatch, method: str,
-                        mode: str = "ids") -> list:
-        if method == "scan":
-            if self.dist is not None:
-                return self.dist.query_batch(batch, mode=mode)
-            return self.columnar.query_batch(batch, mode=mode)
-        if method == "scan_vertical":
-            return self.columnar.query_batch(batch, partial=True, mode=mode)
-        if method == "kdtree" and self.kdtree is not None:
-            return self.kdtree.query_batch(batch, mode=mode)
-        if method == "rstar" and self.rstar is not None:
-            return self.rstar.query_batch(batch, mode=mode)
-        if method == "vafile" and self.vafile is not None:
-            return self.vafile.query_batch(batch, mode=mode)
-        # rowscan (and unbuilt structures) fall back to the per-query path,
-        # which raises the same errors the single-query API does.
-        if mode == "count":
-            return [self._dispatch_count(batch[k], method) for k in range(len(batch))]
-        return [self._dispatch(batch[k], method) for k in range(len(batch))]
-
-    def _dispatch(self, q: T.RangeQuery, method: str) -> np.ndarray:
-        if method == "scan":
-            if self.dist is not None:
-                return self.dist.query(q)
-            return self.columnar.query(q)
-        if method == "scan_vertical":
-            return self.columnar.query_partial(q)
-        if method == "rowscan":
-            if self.rowscan is None:
-                raise ValueError("rowscan not built (pass rowscan=True)")
-            return self.rowscan.query(q)
-        if method == "kdtree":
-            if self.kdtree is None:
-                raise ValueError("kdtree not built")
-            return self.kdtree.query(q)
-        if method == "rstar":
-            if self.rstar is None:
-                raise ValueError("rstar not built")
-            return self.rstar.query(q)
-        if method == "vafile":
-            if self.vafile is None:
-                raise ValueError("vafile not built")
-            return self.vafile.query(q)
-        raise ValueError(f"unknown method {method!r}; options: {ALL_METHODS} or 'auto'")
-
-    def _dispatch_count(self, q: T.RangeQuery, method: str) -> int:
-        """Count-only dispatch: every access path sums its match masks on
-        device instead of materializing an id array."""
-        if method == "scan":
-            if self.dist is not None:
-                return self.dist.count(q)
-            return self.columnar.count(q)
-        if method == "scan_vertical":
-            return self.columnar.count_partial(q)
-        if method == "rowscan":
-            if self.rowscan is None:
-                raise ValueError("rowscan not built (pass rowscan=True)")
-            return self.rowscan.count(q)
-        if method == "kdtree":
-            if self.kdtree is None:
-                raise ValueError("kdtree not built")
-            return self.kdtree.count(q)
-        if method == "rstar":
-            if self.rstar is None:
-                raise ValueError("rstar not built")
-            return self.rstar.count(q)
-        if method == "vafile":
-            if self.vafile is None:
-                raise ValueError("vafile not built")
-            return self.vafile.count(q)
-        raise ValueError(f"unknown method {method!r}; options: {ALL_METHODS} or 'auto'")

@@ -1,0 +1,319 @@
+"""The access-path layer: one protocol behind every MDRQ execution engine.
+
+The paper's experimental matrix (§7.1.3) — scans, tree MDIS, VA-file — is a
+set of interchangeable access paths behind one query interface. This module
+makes that matrix explicit (DESIGN.md §6): ``AccessPath`` is the protocol
+every path speaks, the ``*Path`` adapters put the concrete structures
+(``ColumnarScan``, ``RowScan``, ``DistributedScan``, ``BlockedIndex``,
+``VAFile``) behind it, and ``MDRQEngine`` becomes a name -> path registry —
+adding a path (grid file, learned layout, ...) means registering one object,
+not editing three dispatch chains.
+
+Planning rides the same protocol: each path prices itself, scalar
+(``cost``, the single-query ``Planner.explain`` hook) and vectorized
+(``cost_batch``, the (paths x Q) matrix ``Planner.plan_batch`` builds from
+one ``PlanInputs`` pass). The cost mixins delegate to ``CostModel`` so the
+built-in paths and the planner's structure-free planning stubs share one set
+of formulas; a registered third-party path brings its own.
+
+Conventions:
+
+  * ``cost``/``cost_batch`` return ``inf`` where the path is not applicable
+    (e.g. the vertical scan on a complete-match query) — the planner skips
+    non-finite entries.
+  * ``plannable=False`` paths execute only when named explicitly
+    (``rowscan``; the vertical scan on a meshed engine, where an "auto"
+    choice would lazily re-place the dataset on one device).
+  * ``owns_storage=False`` marks views over another path's arrays so
+    ``memory_report`` never double-counts (the vertical scan shares the
+    columnar scan's data).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Protocol, Union, runtime_checkable
+
+import numpy as np
+
+from repro.core import types as T
+
+Results = Union["list[np.ndarray]", "list[int]"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanInputs:
+    """Per-query planning statistics for one batch, computed in one pass.
+
+    ``Planner.plan_batch`` builds this once from the (Q, 2, m) bounds
+    (``Histograms.dim_selectivity_batch`` / ``selectivity_batch``) and hands
+    it to every path's ``cost_batch`` — no per-query Python loop anywhere in
+    batch planning.
+    """
+
+    lower: np.ndarray      # (Q, m) float32 query lower bounds
+    upper: np.ndarray      # (Q, m) float32 query upper bounds
+    dims_mask: np.ndarray  # (Q, m) bool — True where a dim is constrained
+    mq: np.ndarray         # (Q,) int — number of constrained dims
+    dim_sels: np.ndarray   # (Q, m) per-dim selectivity (1.0 if unconstrained)
+    sels: np.ndarray       # (Q,) independence-assumption query selectivity
+
+    def __len__(self) -> int:
+        return self.lower.shape[0]
+
+    @property
+    def is_complete(self) -> np.ndarray:
+        """(Q,) bool — queries constraining every dimension."""
+        return self.dims_mask.all(axis=1)
+
+
+@runtime_checkable
+class AccessPath(Protocol):
+    """What the engine registry and the planner require of a path.
+
+    Execution surface: ``query``/``count`` singles and ``query_batch`` (one
+    fused launch per bucket; ``mode`` in ``types.RESULT_MODES``). Planning
+    surface: ``cost`` (scalar) and ``cost_batch`` (vectorized over a
+    ``PlanInputs``). ``PerQueryPath`` adapts anything that only has singles.
+    """
+
+    name: str
+    plannable: bool
+    owns_storage: bool
+
+    @property
+    def nbytes_index(self) -> int: ...
+
+    def query(self, q: T.RangeQuery) -> np.ndarray: ...
+
+    def count(self, q: T.RangeQuery) -> int: ...
+
+    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results: ...
+
+    def cost(self, q: T.RangeQuery, sel: float, batch: int, model) -> float: ...
+
+    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model) -> np.ndarray: ...
+
+
+# -- cost mixins --------------------------------------------------------------
+# One mixin per cost shape, delegating to the CostModel formulas so the real
+# paths here and the planner's structure-free stubs cannot drift apart.
+# ``bucket`` is the (Q,) per-query amortization size the planner's fixpoint
+# converged on (realized bucket sizes, not the whole batch).
+
+class ScanCost:
+    """Full fused scan: cost is query-independent except for amortization."""
+
+    def cost(self, q: T.RangeQuery, sel: float, batch: int, model) -> float:
+        return model.cost_scan(q, batch=batch)
+
+    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model) -> np.ndarray:
+        return model.cost_scan_batch(len(pi), bucket)
+
+
+class VerticalScanCost:
+    """Partial-match scan: touches only constrained columns; inapplicable
+    (inf) to complete-match queries, where it degenerates to the full scan."""
+
+    def cost(self, q: T.RangeQuery, sel: float, batch: int, model) -> float:
+        if q.is_complete_match:
+            return float("inf")
+        return model.cost_scan_vertical(q, batch=batch)
+
+    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model) -> np.ndarray:
+        return np.where(pi.is_complete, np.inf,
+                        model.cost_scan_vertical_batch(pi.mq, bucket))
+
+
+class TreeCost:
+    """Blocked tree MDIS (kd-tree / R*-tree): prune + visit two-phase cost."""
+
+    def cost(self, q: T.RangeQuery, sel: float, batch: int, model) -> float:
+        return model.cost_tree(q, sel, batch=batch)
+
+    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model) -> np.ndarray:
+        return model.cost_tree_batch(pi.sels, pi.mq, bucket)
+
+
+class VAFileCost:
+    """VA-file: packed approximation stream + candidate-block refinement."""
+
+    hist: Any  # Histograms — the scalar candidate-fraction estimate needs it
+
+    def cost(self, q: T.RangeQuery, sel: float, batch: int, model) -> float:
+        return model.cost_vafile(q, self.hist, batch=batch)
+
+    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model) -> np.ndarray:
+        return model.cost_vafile_batch(pi.dim_sels, pi.dims_mask, bucket)
+
+
+# -- adapters over the concrete structures ------------------------------------
+
+class ColumnarScanPath(ScanCost):
+    """``ColumnarScan`` as the "scan" path (single-device full fused scan)."""
+
+    name = "scan"
+    plannable = True
+    owns_storage = True
+
+    def __init__(self, scan):
+        self._scan = scan
+
+    @property
+    def nbytes_index(self) -> int:
+        return self._scan.nbytes_index
+
+    def query(self, q: T.RangeQuery) -> np.ndarray:
+        return self._scan.query(q)
+
+    def count(self, q: T.RangeQuery) -> int:
+        return self._scan.count(q)
+
+    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results:
+        return self._scan.query_batch(batch, mode=mode)
+
+
+class DistributedScanPath(ScanCost):
+    """``DistributedScan`` as the "scan" path — one collective launch per
+    batch, data sharded over the mesh (horizontal partitioning, §3.1)."""
+
+    name = "scan"
+    plannable = True
+    owns_storage = True
+
+    def __init__(self, dist):
+        self._dist = dist
+
+    @property
+    def nbytes_index(self) -> int:
+        return self._dist.nbytes_index
+
+    def query(self, q: T.RangeQuery) -> np.ndarray:
+        return self._dist.query(q)
+
+    def count(self, q: T.RangeQuery) -> int:
+        return self._dist.count(q)
+
+    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results:
+        return self._dist.query_batch(batch, mode=mode)
+
+
+class VerticalScanPath(VerticalScanCost):
+    """The partial-match vertical scan (§5.5) as its own path.
+
+    A *view* over the columnar scan's storage (``owns_storage=False``),
+    built lazily through ``scan_ref`` so a meshed engine — where this path is
+    ``plannable=False`` and only runs on explicit request — doesn't place a
+    second full copy of the dataset on one device just by existing.
+    """
+
+    name = "scan_vertical"
+    owns_storage = False
+
+    def __init__(self, scan_ref: Callable[[], Any], plannable: bool = True):
+        self._scan_ref = scan_ref
+        self.plannable = plannable
+
+    @property
+    def nbytes_index(self) -> int:
+        return 0
+
+    def query(self, q: T.RangeQuery) -> np.ndarray:
+        return self._scan_ref().query_partial(q)
+
+    def count(self, q: T.RangeQuery) -> int:
+        return self._scan_ref().count_partial(q)
+
+    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results:
+        return self._scan_ref().query_batch(batch, partial=True, mode=mode)
+
+
+class BlockedIndexPath(TreeCost):
+    """A ``BlockedIndex`` (kd-tree or packed STR R*-tree) as a path."""
+
+    plannable = True
+    owns_storage = True
+
+    def __init__(self, index):
+        self._index = index
+        self.name = index.name
+
+    @property
+    def nbytes_index(self) -> int:
+        return self._index.nbytes_index
+
+    def query(self, q: T.RangeQuery) -> np.ndarray:
+        return self._index.query(q)
+
+    def count(self, q: T.RangeQuery) -> int:
+        return self._index.count(q)
+
+    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results:
+        return self._index.query_batch(batch, mode=mode)
+
+
+class VAFilePath(VAFileCost):
+    """A ``VAFile`` as a path (two-phase approximation scan)."""
+
+    name = "vafile"
+    plannable = True
+    owns_storage = True
+
+    def __init__(self, vafile, hist):
+        self._vafile = vafile
+        self.hist = hist
+
+    @property
+    def nbytes_index(self) -> int:
+        return self._vafile.nbytes_index
+
+    def query(self, q: T.RangeQuery) -> np.ndarray:
+        return self._vafile.query(q)
+
+    def count(self, q: T.RangeQuery) -> int:
+        return self._vafile.count(q)
+
+    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results:
+        return self._vafile.query_batch(batch, mode=mode)
+
+
+class PerQueryPath:
+    """Generic adapter: any object with single-query ``query``/``count``
+    becomes a full ``AccessPath`` whose batch execution is a per-query loop.
+
+    This is the fallback rung of the layer — structures without a fused batch
+    kernel (``RowScan``, prototypes, test doubles) still ride the registry,
+    paying Q launches instead of one. Not plannable by default: a path whose
+    batch cost is Q times its single cost should stay an explicit opt-in
+    until it prices itself (subclass and override ``cost``/``cost_batch``,
+    then pass ``plannable=True``).
+    """
+
+    owns_storage = True
+
+    def __init__(self, name: str, impl, plannable: bool = False):
+        self.name = name
+        self._impl = impl
+        self.plannable = plannable
+
+    @property
+    def nbytes_index(self) -> int:
+        return int(getattr(self._impl, "nbytes_index", 0))
+
+    def query(self, q: T.RangeQuery) -> np.ndarray:
+        return self._impl.query(q)
+
+    def count(self, q: T.RangeQuery) -> int:
+        return self._impl.count(q)
+
+    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results:
+        T.validate_mode(mode)
+        if mode == "count":
+            return [self.count(batch[k]) for k in range(len(batch))]
+        return [self.query(batch[k]) for k in range(len(batch))]
+
+    # A plannable=False path is never priced; keep the protocol total anyway.
+    def cost(self, q: T.RangeQuery, sel: float, batch: int, model) -> float:
+        return float("inf")
+
+    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model) -> np.ndarray:
+        return np.full((len(pi),), np.inf)

@@ -35,16 +35,37 @@ bytes amortize down to a VPU compute floor (``sec_per_cmp``). The two effects
 pull the scan-vs-index break-even in *opposite* directions, and
 ``break_even_selectivity(batch_size=...)`` reports the net — a result the
 paper's single-query analysis cannot express.
+
+Batch planning is vectorized and runs to a fixpoint (DESIGN.md §7): one numpy
+pass over the (Q, 2, m) bounds estimates every query's selectivity
+(``Histograms.selectivity_batch``), each registered access path prices all Q
+queries at once (``AccessPath.cost_batch`` -> a (paths x Q) cost matrix), and
+``plan_batch`` iterates plan -> bucket -> replan so the amortization uses the
+*realized* per-bucket sizes — not the whole-batch approximation — converging
+in 2-3 rounds because every amortized term is monotone in bucket size.
+Planning cost no longer grows Python-linearly with Q.
+
+The planner itself is access-path-agnostic: it ranks whatever path objects it
+holds (the engine's registry, or structure-free stubs when built from names
+for cost-model studies). Path-specific formulas live in the ``CostModel``
+methods the ``core.paths`` cost mixins delegate to.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core import types as T
+from repro.core import paths as paths_mod
+# The VA-file's cell resolution and packing density: the planning slack
+# (2/CELLS per dim) and the approximation bytes (ceil(m / DIMS_PER_WORD)
+# words) derive from the same constants the build and the kernel use, so a
+# cell-resolution change can never silently skew the plan vs the execution.
+from repro.core.vafile import CELLS as VA_CELLS
+from repro.kernels.va_filter import DIMS_PER_WORD as VA_DIMS_PER_WORD
 
 BINS = 64
 
@@ -104,6 +125,57 @@ class Histograms:
                 return 0.0
         return max(s, 1.0 / max(self.n, 1))
 
+    # -- vectorized estimation (batch planning) ----------------------------
+    def dim_selectivity_batch(self, lower: np.ndarray, upper: np.ndarray
+                              ) -> np.ndarray:
+        """(Q, m) per-dimension selectivities in one numpy pass.
+
+        Vectorizes ``dim_selectivity`` over queries *and* dimensions — the
+        (Q, 2, m) bounds broadcast against the (m, BINS) histograms, so batch
+        planning never loops per query per dim in Python. Values match the
+        scalar method exactly per (query, dim), including the special cases:
+        unconstrained dims (1.0), empty ranges and predicates disjoint from
+        the observed domain (0.0), and the in-domain >= 1/n clamp that keeps
+        point predicates rankable.
+        """
+        lo_q = np.asarray(lower, np.float64)
+        up_q = np.asarray(upper, np.float64)
+        e, c = self.edges, self.counts                     # (m, B+1), (m, B)
+        e_lo, e_hi = e[:, 0], e[:, -1]                     # (m,)
+        lo = np.clip(lo_q, e_lo, e_hi)                     # (Q, m)
+        hi = np.clip(up_q, e_lo, e_hi)
+        widths = np.maximum(np.diff(e, axis=1), 1e-30)     # (m, B)
+        # fraction of each bin covered by [lo, hi] -> (Q, m, B)
+        cover = np.clip(
+            (np.minimum(hi[:, :, None], e[None, :, 1:])
+             - np.maximum(lo[:, :, None], e[None, :, :-1])) / widths[None],
+            0.0, 1.0)
+        frac = (c[None] * cover).sum(axis=2) / max(self.n, 1)
+        sel = np.minimum(1.0, np.maximum(frac, 1.0 / max(self.n, 1)))
+        unconstrained = np.isneginf(lo_q) & np.isposinf(up_q)
+        dead = (up_q < lo_q) | (up_q < e_lo) | (lo_q > e_hi)
+        return np.where(unconstrained, 1.0, np.where(dead, 0.0, sel))
+
+    def selectivity_batch(self, lower: np.ndarray, upper: np.ndarray,
+                          dim_sels: Optional[np.ndarray] = None) -> np.ndarray:
+        """(Q,) independence-assumption selectivities for a whole batch.
+
+        One vectorized pass over the (Q, 2, m) bounds; per query the value is
+        identical to scalar ``selectivity`` (pass ``dim_sels`` to reuse an
+        existing ``dim_selectivity_batch`` result). The scalar method early-
+        exits with 0.0 the moment a running product hits zero — a provably
+        disjoint dim, or float underflow — and otherwise floors the final
+        product at 1/n; the prefix-product check reproduces both exactly
+        (unconstrained dims contribute an exact 1.0 factor, so interleaving
+        them does not perturb the product).
+        """
+        if dim_sels is None:
+            dim_sels = self.dim_selectivity_batch(lower, upper)
+        prefix = np.cumprod(dim_sels, axis=1)
+        dead = (prefix == 0.0).any(axis=1)
+        return np.where(dead, 0.0,
+                        np.maximum(prefix[:, -1], 1.0 / max(self.n, 1)))
+
 
 @dataclasses.dataclass
 class CostModel:
@@ -141,10 +213,13 @@ class CostModel:
         return float(min(1.0, (side + l) ** mq))
 
     def est_va_candidate_frac(self, q: T.RangeQuery, hist: Histograms) -> float:
+        # Per queried dim the candidate cells overrun the query box by at most
+        # one cell on each side: slack = 2/CELLS of the domain — derived from
+        # the build's actual cell resolution, never hardcoded.
         f = 1.0
         for d in np.nonzero(q.dims_mask)[0]:
             s = hist.dim_selectivity(int(d), float(q.lower[d]), float(q.upper[d]))
-            f *= min(1.0, s + 2.0 / 4.0)
+            f *= min(1.0, s + 2.0 / VA_CELLS)
         return f
 
     # -- per-path costs ----------------------------------------------------
@@ -194,7 +269,7 @@ class CostModel:
             + self.host_sync_overhead / max(batch, 1)
 
     def cost_vafile(self, q: T.RangeQuery, hist: Histograms, batch: int = 1) -> float:
-        words = -(-self.m // 16)
+        words = -(-self.m // VA_DIMS_PER_WORD)  # packing density of the kernel
         # Both phases are fused per batch (``multi_va_filter`` +
         # ``multi_range_scan_visit``): the packed words stream from HBM once
         # per *batch* — down to the VPU unpack-compare floor — and both sync
@@ -212,12 +287,144 @@ class CostModel:
             + 2.0 * self.dispatch_overhead / max(batch, 1) \
             + self.host_sync_overhead / max(batch, 1)
 
+    # -- vectorized per-path costs (batch planning) ------------------------
+    # Same formulas as the scalar methods, evaluated for all Q queries of a
+    # batch at once. ``bucket`` is the (Q,) per-query amortization size — the
+    # realized size of the launch bucket each query lands in under the
+    # planner's fixpoint, where the scalar methods take one ``batch`` int.
+    def _scan_cost_batch(self, elems: np.ndarray, bucket: np.ndarray,
+                         n_devices: int | None) -> np.ndarray:
+        d = max(n_devices if n_devices is not None else self.n_devices, 1)
+        local = np.asarray(elems, np.float64) / d
+        b = np.maximum(np.asarray(bucket, np.float64), 1.0)
+        stream = local * self.bytes_per_val * self.sec_per_byte / b
+        cost = np.maximum(stream, local * self.sec_per_cmp) \
+            + self.dispatch_overhead / b
+        if d > 1:
+            cost = cost + self.collective_overhead / b
+        return cost
+
+    def cost_scan_batch(self, n_queries: int, bucket: np.ndarray,
+                        n_devices: int | None = None) -> np.ndarray:
+        """(Q,) full fused-scan costs (query-independent except amortization)."""
+        elems = np.full((n_queries,), float(self.n) * self.m)
+        return self._scan_cost_batch(elems, bucket, n_devices)
+
+    def cost_scan_vertical_batch(self, mq: np.ndarray, bucket: np.ndarray,
+                                 n_devices: int | None = None) -> np.ndarray:
+        """(Q,) vertical-scan costs from per-query constrained-dim counts.
+
+        Like the scalar method, defaults to one device: the distributed path
+        implements only the full fused scan, so the vertical scan runs on one
+        device regardless of the mesh.
+        """
+        elems = float(self.n) * np.maximum(np.asarray(mq, np.float64), 1.0)
+        return self._scan_cost_batch(
+            elems, bucket, n_devices if n_devices is not None else 1)
+
+    def cost_tree_batch(self, sels: np.ndarray, mq: np.ndarray,
+                        bucket: np.ndarray) -> np.ndarray:
+        """(Q,) blocked-tree costs from per-query selectivities + dim counts."""
+        b = np.maximum(np.asarray(bucket, np.float64), 1.0)
+        n_leaves = -(-self.n // self.tile_n)
+        prune = 2 * n_leaves * self.m * self.bytes_per_val / b
+        mq1 = np.maximum(np.asarray(mq, np.float64), 1.0)
+        side = np.asarray(sels, np.float64) ** (1.0 / mq1)
+        f = np.minimum(1.0, (side + self.leaf_side()) ** mq1)
+        refine = f * self.n * self.m * self.bytes_per_val / self.visit_bw_discount
+        return (prune + refine) * self.sec_per_byte \
+            + 2.0 * self.dispatch_overhead / b \
+            + self.host_sync_overhead / b
+
+    def cost_vafile_batch(self, dim_sels: np.ndarray, dims_mask: np.ndarray,
+                          bucket: np.ndarray) -> np.ndarray:
+        """(Q,) VA-file costs from (Q, m) per-dim selectivities."""
+        b = np.maximum(np.asarray(bucket, np.float64), 1.0)
+        words = -(-self.m // VA_DIMS_PER_WORD)
+        approx = np.maximum(self.n * words * 4 * self.sec_per_byte / b,
+                            self.n * self.m * self.sec_per_cmp)
+        cand = np.prod(
+            np.where(dims_mask,
+                     np.minimum(1.0, np.asarray(dim_sels, np.float64)
+                                + 2.0 / VA_CELLS),
+                     1.0),
+            axis=1)
+        blk_frac = 1.0 - (1.0 - np.minimum(cand, 1.0)) ** self.tile_n
+        refine = blk_frac * self.n * self.m * self.bytes_per_val \
+            / self.visit_bw_discount
+        return approx + refine * self.sec_per_byte \
+            + 2.0 * self.dispatch_overhead / b \
+            + self.host_sync_overhead / b
+
 
 @dataclasses.dataclass
 class Plan:
     method: str
     est_selectivity: float
     costs: dict[str, float]
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    """Outcome of one vectorized batch-planning fixpoint (``plan_batch``).
+
+    ``methods[k]`` is query k's access path; ``bucket_sizes`` the realized
+    launch buckets the converged amortization priced (they are exactly the
+    buckets ``MDRQEngine.query_batch`` executes). ``costs`` is the final
+    (paths x Q) matrix over ``path_names`` — inf where a path is not
+    applicable to a query.
+    """
+
+    methods: list[str]
+    est_selectivity: np.ndarray      # (Q,)
+    bucket_sizes: dict[str, int]
+    n_iterations: int
+    converged: bool
+    path_names: tuple[str, ...]
+    costs: np.ndarray                # (paths, Q) float64
+
+
+class _PlanStub:
+    """Structure-free stand-in for an access path (cost surface only).
+
+    Lets a ``Planner`` be built from path *names* — cost-model studies and
+    break-even sweeps price hypothetical configurations (e.g. n=10M) without
+    building any structure. Execution methods are deliberately absent: a stub
+    can be ranked, never queried.
+    """
+
+    plannable = True
+    owns_storage = False
+    nbytes_index = 0
+
+    def __init__(self, name: str, hist: Histograms):
+        self.name = name
+        self.hist = hist
+
+
+class _ScanStub(paths_mod.ScanCost, _PlanStub):
+    pass
+
+
+class _VerticalScanStub(paths_mod.VerticalScanCost, _PlanStub):
+    pass
+
+
+class _TreeStub(paths_mod.TreeCost, _PlanStub):
+    pass
+
+
+class _VAFileStub(paths_mod.VAFileCost, _PlanStub):
+    pass
+
+
+_STUB_KINDS = {
+    "scan": _ScanStub,
+    "scan_vertical": _VerticalScanStub,
+    "kdtree": _TreeStub,
+    "rstar": _TreeStub,
+    "vafile": _VAFileStub,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,40 +457,143 @@ class CalibrationReport:
 
 
 class Planner:
-    """Chooses scan vs index per query — the paper's conclusion, operational."""
+    """Chooses scan vs index per query — the paper's conclusion, operational.
+
+    Ranks a set of access-path objects (``core.paths.AccessPath``): the
+    engine hands over its registry (a shared name -> path dict, so paths
+    registered later are planned without touching the planner), while a
+    planner built from *names* gets structure-free cost stubs — the form the
+    break-even and calibration studies use.
+    """
 
     def __init__(self, hist: Histograms, model: CostModel,
-                 available: tuple[str, ...] = ("scan", "scan_vertical", "kdtree", "vafile")):
+                 available: tuple[str, ...] = ("scan", "scan_vertical", "kdtree", "vafile"),
+                 paths: Union[dict, Sequence, None] = None):
         self.hist = hist
         self.model = model
-        self.available = available
+        if paths is not None:
+            self._paths = (paths if isinstance(paths, dict)
+                           else {p.name: p for p in paths})
+        else:
+            self._paths = {}
+            for name in available:
+                kind = _STUB_KINDS.get(name)
+                if kind is None:
+                    raise ValueError(
+                        f"no default cost model for path {name!r}; pass the "
+                        f"path object via ``paths=`` instead")
+                self._paths[name] = kind(name, hist)
+
+    @property
+    def available(self) -> tuple[str, ...]:
+        """Names of the plannable paths, in registration order."""
+        return tuple(name for name, p in self._paths.items() if p.plannable)
+
+    def _plannable(self) -> list:
+        return [(name, p) for name, p in self._paths.items() if p.plannable]
 
     def explain(self, q: T.RangeQuery, batch_size: int = 1) -> Plan:
         """Rank access paths for q; ``batch_size`` amortizes the fixed taxes
-        (and fused-scan bytes) over a batch of concurrently executed queries."""
+        (and fused-scan bytes) over a batch of concurrently executed queries.
+        Paths pricing themselves inf (not applicable) are omitted."""
         sel = self.hist.selectivity(q)
         costs: dict[str, float] = {}
-        if "scan" in self.available:
-            costs["scan"] = self.model.cost_scan(q, batch=batch_size)
-        if "scan_vertical" in self.available and not q.is_complete_match:
-            costs["scan_vertical"] = self.model.cost_scan_vertical(q, batch=batch_size)
-        for tree in ("kdtree", "rstar"):
-            if tree in self.available:
-                costs[tree] = self.model.cost_tree(q, sel, batch=batch_size)
-        if "vafile" in self.available:
-            costs["vafile"] = self.model.cost_vafile(q, self.hist, batch=batch_size)
+        for name, p in self._plannable():
+            c = float(p.cost(q, sel, batch_size, self.model))
+            if np.isfinite(c):
+                costs[name] = c
+        if not costs:
+            raise ValueError("no applicable access path for query")
         method = min(costs, key=costs.get)
         return Plan(method=method, est_selectivity=sel, costs=costs)
 
-    def explain_batch(self, queries) -> list[Plan]:
-        """Per-query plans under whole-batch amortization.
+    def plan_inputs(self, batch: T.QueryBatch) -> paths_mod.PlanInputs:
+        """One vectorized estimation pass over the whole batch's bounds."""
+        dims_mask = batch.dims_mask
+        dim_sels = self.hist.dim_selectivity_batch(batch.lower, batch.upper)
+        sels = self.hist.selectivity_batch(batch.lower, batch.upper,
+                                           dim_sels=dim_sels)
+        return paths_mod.PlanInputs(
+            lower=batch.lower, upper=batch.upper, dims_mask=dims_mask,
+            mq=dims_mask.sum(axis=1), dim_sels=dim_sels, sels=sels)
 
-        The amortization uses the total batch size for every query — a
-        deliberate simplification (the true per-bucket size is only known
-        after bucketing, which depends on these very plans).
+    def plan_batch(self, batch, max_iters: int = 4) -> BatchPlan:
+        """Plan a whole batch: vectorized costs + plan -> bucket -> replan.
+
+        Iteration 1 prices every path under whole-batch amortization (the
+        optimistic bound — every fused launch the size of the full batch).
+        Each later iteration re-prices with the *realized* bucket sizes of
+        the previous assignment: for query k, path p amortizes over p's
+        current bucket (plus k itself if it would join), so a path that
+        looked cheap only because the whole batch paid its fixed taxes loses
+        its subsidy once its realized bucket is small. Amortized terms are
+        monotone in bucket size, so assignments settle in 2-3 rounds;
+        ``max_iters`` bounds the pathological case and ``converged`` reports
+        which happened. No step loops over queries in Python.
         """
+        if not isinstance(batch, T.QueryBatch):
+            batch = T.QueryBatch.from_queries(list(batch))
+        pi = self.plan_inputs(batch)
+        entries = self._plannable()
+        if not entries:
+            raise ValueError("no plannable access paths registered")
+        names = [name for name, _ in entries]
+        q_n = len(batch)
+        assign: Optional[np.ndarray] = None
+        sizes = np.zeros((len(entries),), np.float64)
+        converged = False
+        costs = np.empty((len(entries), q_n), np.float64)
+        n_iterations = 0
+        for n_iterations in range(1, max_iters + 1):
+            for j, (_, p) in enumerate(entries):
+                bucket = (np.full((q_n,), float(q_n)) if assign is None
+                          else sizes[j] + (assign != j))
+                costs[j] = np.broadcast_to(
+                    np.asarray(p.cost_batch(pi, bucket, self.model),
+                               np.float64), (q_n,))
+            # NaN costs count as inapplicable, exactly like the scalar
+            # ``explain``'s isfinite filter — otherwise argmin would treat
+            # NaN as the minimum and silently assign the broken path.
+            np.copyto(costs, np.inf, where=np.isnan(costs))
+            new_assign = np.argmin(costs, axis=0)
+            if assign is not None and np.array_equal(new_assign, assign):
+                converged = True
+                break
+            assign = new_assign
+            sizes = np.bincount(assign,
+                                minlength=len(entries)).astype(np.float64)
+        if np.isinf(costs[assign, np.arange(q_n)]).any():
+            # every plannable path priced itself inapplicable for some query
+            # — same condition (and error) as the scalar ``explain``
+            raise ValueError("no applicable access path for query")
+        counts = np.bincount(assign, minlength=len(entries))
+        return BatchPlan(
+            methods=[names[int(a)] for a in assign],
+            est_selectivity=pi.sels,
+            bucket_sizes={names[j]: int(c) for j, c in enumerate(counts) if c},
+            n_iterations=n_iterations,
+            converged=converged,
+            path_names=tuple(names),
+            costs=costs,
+        )
+
+    def explain_batch(self, queries) -> list[Plan]:
+        """Per-query plans under whole-batch amortization — literally
+        iteration 1 of ``plan_batch``'s fixpoint, reshaped into Plans (kept
+        for cost introspection: every Plan carries the per-path cost dict)."""
         queries = list(queries)
-        return [self.explain(q, batch_size=len(queries)) for q in queries]
+        if not queries:
+            return []
+        bp = self.plan_batch(T.QueryBatch.from_queries(queries), max_iters=1)
+        plans = []
+        for k in range(len(queries)):
+            cd = {name: float(bp.costs[j, k])
+                  for j, name in enumerate(bp.path_names)
+                  if np.isfinite(bp.costs[j, k])}
+            plans.append(Plan(method=bp.methods[k],
+                              est_selectivity=float(bp.est_selectivity[k]),
+                              costs=cd))
+        return plans
 
     def choose(self, q: T.RangeQuery, batch_size: int = 1) -> str:
         return self.explain(q, batch_size=batch_size).method

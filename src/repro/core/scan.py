@@ -138,6 +138,7 @@ class ColumnarScan:
 
     def query_batch(self, batch: T.QueryBatch, partial: bool = False,
                     mode: str = "ids") -> list[np.ndarray] | list[int]:
+        T.validate_mode(mode)
         if mode == "count":
             return self.count_batch(batch, partial=partial)
         masks = self.mask_batch_partial(batch) if partial else self.mask_batch(batch)

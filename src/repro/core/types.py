@@ -30,6 +30,18 @@ POS_INF = np.float32(np.inf)
 RESULT_MODES = ("ids", "count")
 
 
+def validate_mode(mode: str) -> str:
+    """Reject unknown result modes with the one canonical error.
+
+    Every entry point that accepts a ``mode`` (engine singles and batches,
+    the access paths, the serving front end) validates through here, so the
+    check — and its error text — cannot drift between layers.
+    """
+    if mode not in RESULT_MODES:
+        raise ValueError(f"unknown mode {mode!r}; options: {RESULT_MODES}")
+    return mode
+
+
 @dataclasses.dataclass(frozen=True)
 class RangeQuery:
     """A multidimensional range query (complete- or partial-match).

@@ -36,9 +36,12 @@ import numpy as np
 
 from repro.core import types as T
 from repro.kernels import ops
-from repro.kernels.va_filter import pack_codes, DIMS_PER_WORD
+from repro.kernels.va_filter import BITS_PER_DIM, pack_codes, DIMS_PER_WORD
 
-CELLS = 4  # 2 bits per dimension (paper §2.2.3)
+# Cells per dimension, derived from the kernel's bit width (paper §2.2.3:
+# static b_j = 2 -> 4 cells). The planner's VA cost derives its slack and
+# word counts from here too — one constant governs build, kernel, and plan.
+CELLS = 1 << BITS_PER_DIM
 
 
 _next_pow2 = T.next_pow2
@@ -184,6 +187,7 @@ class VAFile:
                                            run_fused_visit_counts,
                                            scatter_visit_results)
 
+        T.validate_mode(mode)
         q_n = len(batch)
         qids, bids = self._candidate_blocks_batch(batch)
         self.last_visited_blocks = int(qids.size)

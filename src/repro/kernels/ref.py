@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.va_filter import BITS_PER_DIM, CODE_MASK, DIMS_PER_WORD
+
 
 def range_scan_ref(data_cm: jax.Array, lower: jax.Array, upper: jax.Array) -> jax.Array:
     """Oracle for the columnar range-scan kernel.
@@ -185,11 +187,12 @@ def va_filter_packed_ref(
     acc = jnp.ones((n,), dtype=jnp.bool_)
     for wi in range(w):
         word = packed[wi]
-        for k in range(16):
-            d = wi * 16 + k
+        for k in range(DIMS_PER_WORD):
+            d = wi * DIMS_PER_WORD + k
             if d >= m:
                 break
-            field = jnp.bitwise_and(jnp.right_shift(word, 2 * k), 3)
+            field = jnp.bitwise_and(jnp.right_shift(word, BITS_PER_DIM * k),
+                                    CODE_MASK)
             acc = jnp.logical_and(
                 acc, jnp.logical_and(field >= cell_lo[d], field <= cell_hi[d])
             )
@@ -215,11 +218,12 @@ def multi_va_filter_packed_ref(
     acc = jnp.ones((q_n, n), dtype=jnp.bool_)
     for wi in range(w):
         word = packed[wi]  # (n,)
-        for k in range(16):
-            d = wi * 16 + k
+        for k in range(DIMS_PER_WORD):
+            d = wi * DIMS_PER_WORD + k
             if d >= m:
                 break
-            field = jnp.bitwise_and(jnp.right_shift(word, 2 * k), 3)  # (n,)
+            field = jnp.bitwise_and(jnp.right_shift(word, BITS_PER_DIM * k),
+                                    CODE_MASK)  # (n,)
             ok = jnp.logical_and(field[None, :] >= cell_lo[d, :, None],
                                  field[None, :] <= cell_hi[d, :, None])
             acc = jnp.logical_and(acc, ok)

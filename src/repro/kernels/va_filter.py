@@ -31,17 +31,23 @@ from jax.experimental import pallas as pl
 
 LANES = 128
 DEFAULT_TILE_N = 2048
-DIMS_PER_WORD = 16
+# The paper's static cell resolution (b_j = 2, §2.2.3). Everything downstream
+# — word packing density, the planner's candidate-fraction slack and
+# approximation byte count, ``vafile.CELLS`` — derives from this one constant
+# so a resolution change cannot silently skew one layer against another.
+BITS_PER_DIM = 2
+CODE_MASK = (1 << BITS_PER_DIM) - 1
+DIMS_PER_WORD = 32 // BITS_PER_DIM
 
 
 def pack_codes(codes: np.ndarray) -> np.ndarray:
-    """Pack (m, n) uint8 codes in [0,3] into (ceil(m/16), n) int32 words."""
+    """Pack (m, n) uint8 cell codes into (ceil(m/DIMS_PER_WORD), n) int32."""
     m, n = codes.shape
     w = -(-m // DIMS_PER_WORD)
     out = np.zeros((w, n), dtype=np.int32)
     for d in range(m):
         wi, k = divmod(d, DIMS_PER_WORD)
-        out[wi] |= codes[d].astype(np.int32) << (2 * k)
+        out[wi] |= codes[d].astype(np.int32) << (BITS_PER_DIM * k)
     return out
 
 
@@ -55,7 +61,8 @@ def _va_kernel(qlo_ref, qhi_ref, packed_ref, out_ref, *, m: int):
             d = wi * DIMS_PER_WORD + k
             if d >= m:
                 break
-            field = jnp.bitwise_and(jnp.right_shift(word, 2 * k), 3)
+            field = jnp.bitwise_and(jnp.right_shift(word, BITS_PER_DIM * k),
+                                    CODE_MASK)
             ok = jnp.logical_and(field >= qlo_ref[d, 0], field <= qhi_ref[d, 0])
             acc = ok if acc is None else jnp.logical_and(acc, ok)
     out_ref[...] = acc[None, :].astype(jnp.int8)

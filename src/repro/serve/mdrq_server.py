@@ -30,7 +30,8 @@ from typing import Optional, Union
 
 import numpy as np
 
-from repro.core import MDRQEngine, RangeQuery, RESULT_MODES
+from repro.core import MDRQEngine, RangeQuery
+from repro.core.types import validate_mode
 
 
 @dataclasses.dataclass
@@ -55,6 +56,9 @@ class ServerStats:
     n_queries: int = 0
     n_batches: int = 0
     busy_seconds: float = 0.0
+    # planning share of busy_seconds (the engine's BatchStats.plan_seconds
+    # summed over flushes) — how much of the window went to the batch planner
+    plan_seconds: float = 0.0
     n_results: int = 0
     # access-path buckets summed over every flushed batch
     method_counts: dict[str, int] = dataclasses.field(default_factory=dict)
@@ -81,8 +85,7 @@ class MDRQServer:
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
-        if mode not in RESULT_MODES:
-            raise ValueError(f"unknown mode {mode!r}; options: {RESULT_MODES}")
+        validate_mode(mode)
         self.engine = engine
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
@@ -150,6 +153,7 @@ class MDRQServer:
         self.stats.n_queries += len(pending)
         self.stats.n_batches += 1
         self.stats.busy_seconds += dt
+        self.stats.plan_seconds += self.engine.last_batch_stats.plan_seconds
         self.stats.n_results += self.engine.last_batch_stats.n_results
         for m, c in self.engine.last_batch_stats.method_counts.items():
             self.stats.method_counts[m] = self.stats.method_counts.get(m, 0) + c
