@@ -1,7 +1,8 @@
 # Developer entry points. The tier-1 gate is exactly what CI runs.
 PYTHONPATH := src
 
-.PHONY: test test-dist smoke bench-throughput bench-count bench-dist bench
+.PHONY: test test-dist smoke lint bench-throughput bench-count bench-specs \
+        bench-specs-smoke bench-dist bench
 
 # Tier-1 verify: the full test suite, fail-fast.
 test:
@@ -22,9 +23,23 @@ smoke:
 bench-throughput:
 	PYTHONPATH=src python -m benchmarks.run --only throughput
 
+# Lint gate (config in pyproject.toml; CI runs exactly this).
+lint:
+	ruff check .
+
 # Count-only result mode sweep (device-side reduction, no host nonzero).
 bench-count:
 	PYTHONPATH=src python -m benchmarks.run --only throughput-count
+
+# Reduced result shapes (top-k / aggregates) vs ids at the largest batch.
+bench-specs:
+	PYTHONPATH=src python -m benchmarks.run --only throughput-specs
+
+# CI-sized reducer smoke: one TopK row + one Agg row at tiny sizes so a
+# reducer perf regression surfaces in CI logs.
+bench-specs-smoke:
+	PYTHONPATH=src python -m benchmarks.bench_throughput --spec topk --smoke
+	PYTHONPATH=src python -m benchmarks.bench_throughput --spec agg --smoke
 
 # Cross-device batched scan sweep on the 8-device CPU proxy.
 bench-dist:

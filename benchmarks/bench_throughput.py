@@ -7,10 +7,12 @@ the seed engine's per-query regime, so the B{128}/B{1} speedup row is the
 amortization headline. Like every benchmark here, CPU numbers use the XLA
 backend as the honest proxy (see common.py); real kernel numbers are TPU.
 
-``run_count`` (the ``--mode count`` sweep, ``make bench-count``) repeats the
-mixed-workload sweep in count-only result mode: match counts reduce on
-device and the per-query host-side ``nonzero`` never runs, so the count/ids
-qps ratio isolates the result-materialization tax from the kernel work.
+Result shapes ride the ResultSpec layer: every row carries a ``result_spec``
+column, ``--spec {ids,count,mask,topk,agg}`` selects the shape for the mixed
+sweep, and ``run_specs`` (the ``--spec topk`` / ``--spec agg`` CI smoke rows)
+compares reduced shapes against ids at the largest batch — the reduced
+payload (O(k)/O(1) bytes over the device->host boundary instead of a mask)
+is the row-to-row delta. ``run_count`` keeps the PR 2 count-only sweep.
 """
 import os
 import sys
@@ -26,18 +28,28 @@ if __name__ == "__main__":  # direct module run: set the backend before any
 import numpy as np
 
 from benchmarks.common import emit_row
-from repro.core import MDRQEngine
+from repro.core import Agg, Count, Ids, Mask, MDRQEngine, TopK
 from repro.data import gmrqb
 from repro.serve.mdrq_server import MDRQServer
 
 BATCH_SIZES = (1, 8, 32, 128)
 
+# The --spec vocabulary: one representative instance per registered kind
+# (GMRQB dim 0 = the age attribute for top-k/aggregates).
+SPEC_CHOICES = {
+    "ids": Ids(),
+    "count": Count(),
+    "mask": Mask(),
+    "topk": TopK(k=10, dim=0),
+    "agg": Agg("sum", 0),
+}
+
 
 def _throughput(eng, queries, batch: int, method: str = "auto",
-                mode: str = "ids"):
+                spec=Ids()):
     """(qps, whole-workload ServerStats) through a fresh serving window."""
     server = MDRQServer(eng, max_batch=batch, max_wait_s=float("inf"),
-                        method=method, mode=mode)
+                        method=method, spec=spec)
     server.serve_all(queries[: 2 * batch])  # warmup (jit + retrace buckets)
     server.stats = type(server.stats)()
     server.serve_all(queries)
@@ -51,63 +63,91 @@ def _plan_us(stats) -> float:
     return 1e6 * stats.plan_seconds / max(stats.n_queries, 1)
 
 
-def _workload(quick: bool):
-    n = 200_000 if quick else 1_000_000
+def _workload(quick: bool, smoke: bool = False):
+    if smoke:
+        n, n_queries = 20_000, 32
+    else:
+        n, n_queries = (200_000, 128) if quick else (1_000_000, 256)
     ds = gmrqb.build(n, seed=0)
     eng = MDRQEngine(ds, structures=("scan", "kdtree", "vafile"))
-    n_queries = 128 if quick else 256
     mixed = [q for _, q in gmrqb.mixed_workload(ds, n_queries, seed=2)]
     return eng, mixed, n_queries
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, spec=Ids()) -> None:
     eng, mixed, n_queries = _workload(quick)
+    kind = spec.kind
 
     # Mixed workload (all 8 templates interleaved) across batch sizes.
     base = None
     for b in BATCH_SIZES:
-        r, stats = _throughput(eng, mixed, b)
+        r, stats = _throughput(eng, mixed, b, spec=spec)
         base = base or r
         emit_row(f"throughput/mixed/B{b}", 1e6 / r,
                  f"qps={r:.1f};speedup_vs_B1={r / base:.2f}x;"
-                 f"plan_us_per_q={_plan_us(stats):.1f}")
+                 f"plan_us_per_q={_plan_us(stats):.1f}", result_spec=kind)
 
     # Per-template mixes at the largest batch: which access path carries the
     # throughput for each selectivity band.
     rng = np.random.default_rng(3)
     for k in (1, 4, 8):
         queries = [gmrqb.template(k, rng, eng.dataset) for _ in range(n_queries)]
-        r, stats = _throughput(eng, queries, BATCH_SIZES[-1])
+        r, stats = _throughput(eng, queries, BATCH_SIZES[-1], spec=spec)
         emit_row(f"throughput/T{k}/B{BATCH_SIZES[-1]}", 1e6 / r,
                  f"qps={r:.1f};buckets={'+'.join(sorted(stats.method_counts))};"
-                 f"plan_us_per_q={_plan_us(stats):.1f}")
+                 f"plan_us_per_q={_plan_us(stats):.1f}", result_spec=kind)
 
     # Fixed-method sweep: isolates the fused-kernel win from planner choices.
     for meth in ("scan", "scan_vertical"):
-        r1, _ = _throughput(eng, mixed, 1, method=meth)
-        rb, _ = _throughput(eng, mixed, BATCH_SIZES[-1], method=meth)
+        r1, _ = _throughput(eng, mixed, 1, method=meth, spec=spec)
+        rb, _ = _throughput(eng, mixed, BATCH_SIZES[-1], method=meth,
+                            spec=spec)
         emit_row(f"throughput/{meth}/B{BATCH_SIZES[-1]}", 1e6 / rb,
-                 f"qps={rb:.1f};speedup_vs_B1={rb / r1:.2f}x")
+                 f"qps={rb:.1f};speedup_vs_B1={rb / r1:.2f}x",
+                 result_spec=kind)
 
 
 def run_count(quick: bool = True) -> None:
-    """Count-only result mode sweep (``--mode count`` / ``make bench-count``)."""
+    """Count-only result mode sweep (``--spec count`` / ``make bench-count``)."""
     eng, mixed, _ = _workload(quick)
 
     base = None
     for b in BATCH_SIZES:
-        r, _ = _throughput(eng, mixed, b, mode="count")
+        r, _ = _throughput(eng, mixed, b, spec=Count())
         base = base or r
         emit_row(f"throughput/count/mixed/B{b}", 1e6 / r,
-                 f"qps={r:.1f};speedup_vs_B1={r / base:.2f}x")
+                 f"qps={r:.1f};speedup_vs_B1={r / base:.2f}x",
+                 result_spec="count")
 
     # Count-vs-ids at the largest batch: the id-materialization tax, per path.
     for meth in ("scan", "vafile"):
         r_ids, _ = _throughput(eng, mixed, BATCH_SIZES[-1], method=meth)
         r_cnt, _ = _throughput(eng, mixed, BATCH_SIZES[-1], method=meth,
-                               mode="count")
+                               spec=Count())
         emit_row(f"throughput/count/{meth}/B{BATCH_SIZES[-1]}", 1e6 / r_cnt,
-                 f"qps={r_cnt:.1f};count_vs_ids={r_cnt / r_ids:.2f}x")
+                 f"qps={r_cnt:.1f};count_vs_ids={r_cnt / r_ids:.2f}x",
+                 result_spec="count")
+
+
+def run_specs(quick: bool = True, smoke: bool = False,
+              kinds=("topk", "agg")) -> None:
+    """Reduced-result-shape sweep: one row per spec kind at the largest
+    batch, with the spec/ids qps ratio isolating the result-materialization
+    tax the on-device reducers remove. ``smoke=True`` runs CI-sized inputs
+    so a reducer performance regression surfaces in CI logs (`make
+    bench-specs-smoke`)."""
+    eng, mixed, _ = _workload(quick, smoke=smoke)
+    batch = 32 if smoke else BATCH_SIZES[-1]
+    r_ids, _ = _throughput(eng, mixed, batch)
+    emit_row(f"throughput/spec/B{batch}", 1e6 / r_ids, f"qps={r_ids:.1f}",
+             result_spec="ids")
+    for kind in kinds:
+        spec = SPEC_CHOICES[kind]
+        r, stats = _throughput(eng, mixed, batch, spec=spec)
+        emit_row(f"throughput/spec/B{batch}", 1e6 / r,
+                 f"qps={r:.1f};vs_ids={r / r_ids:.2f}x;"
+                 f"buckets={'+'.join(sorted(stats.method_counts))}",
+                 result_spec=kind)
 
 
 def run_devices(quick: bool = True) -> None:
@@ -139,11 +179,12 @@ def run_devices(quick: bool = True) -> None:
             continue
         # one engine (one pad + shard placement) per mesh size, both modes
         eng = MDRQEngine(ds, structures=("scan",), mesh=make_data_mesh(d))
-        for mode in ("ids", "count"):
-            r, _ = _throughput(eng, queries, batch, method="scan", mode=mode)
-            base.setdefault(mode, r)
-            emit_row(f"throughput/dist/{mode}/D{d}/B{batch}", 1e6 / r,
-                     f"qps={r:.1f};speedup_vs_D1={r / base[mode]:.2f}x")
+        for spec in (Ids(), Count()):
+            r, _ = _throughput(eng, queries, batch, method="scan", spec=spec)
+            base.setdefault(spec.kind, r)
+            emit_row(f"throughput/dist/{spec.kind}/D{d}/B{batch}", 1e6 / r,
+                     f"qps={r:.1f};speedup_vs_D1={r / base[spec.kind]:.2f}x",
+                     result_spec=spec.kind)
 
 
 if __name__ == "__main__":
@@ -151,8 +192,12 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
-    ap.add_argument("--mode", choices=("ids", "count"), default="ids",
-                    help="result mode to sweep")
+    ap.add_argument("--spec", choices=tuple(SPEC_CHOICES), default="ids",
+                    help="result spec to sweep (reduced kinds run the "
+                         "spec-vs-ids comparison section)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized inputs (tiny n, one spec row) — the "
+                         "reducer-regression smoke")
     ap.add_argument("--devices", action="store_true",
                     help="cross-device batched scan sweep (forces an "
                          "8-device CPU platform when XLA_FLAGS is unset)")
@@ -161,5 +206,9 @@ if __name__ == "__main__":
     print(CSV_HEADER, flush=True)
     if args.devices:
         run_devices(quick=not args.full)
+    elif args.spec == "count":
+        run_count(quick=not args.full)
+    elif args.spec in ("topk", "agg", "mask"):
+        run_specs(quick=not args.full, smoke=args.smoke, kinds=(args.spec,))
     else:
-        (run_count if args.mode == "count" else run)(quick=not args.full)
+        run(quick=not args.full)

@@ -42,8 +42,13 @@ def qps(engine, queries, method: str, n_warm: int = 3) -> float:
     return len(queries) / dt
 
 
-CSV_HEADER = "name,us_per_call,derived"
+CSV_HEADER = "name,us_per_call,result_spec,derived"
 
 
-def emit_row(name: str, us: float, derived: str = "") -> None:
-    print(f"{name},{us:.2f},{derived}", flush=True)
+def emit_row(name: str, us: float, derived: str = "",
+             result_spec: str = "ids") -> None:
+    """One CSV row. ``result_spec`` is the ResultSpec kind the row measured
+    ("ids" unless a benchmark sweeps reduced result shapes) — a first-class
+    column so throughput tables distinguish ids/count/top-k runs instead of
+    overloading the name or the derived blob."""
+    print(f"{name},{us:.2f},{result_spec},{derived}", flush=True)

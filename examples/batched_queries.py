@@ -15,7 +15,7 @@ import time
 
 import numpy as np
 
-from repro.core import MDRQEngine
+from repro.core import Agg, Count, MDRQEngine, TopK
 from repro.data import gmrqb
 from repro.serve.mdrq_server import MDRQServer
 
@@ -50,19 +50,29 @@ def main() -> None:
     served = server.serve_all(queries)
     assert all(np.array_equal(a, b) for a, b in zip(singles, served))
 
-    # 4) count-only result mode: match counts reduce on device, the per-query
-    # host-side nonzero never runs (COUNT(*) analytics fast path)
-    eng.query_batch(queries, mode="count")
+    # 4) reduced result shapes (the ResultSpec layer): counts, top-k by an
+    # attribute, and aggregates reduce on device — only the payload crosses
+    # to the host, the per-query nonzero never runs
+    eng.query_batch(queries, spec=Count())
     t0 = time.perf_counter()
-    counts = eng.query_batch(queries, mode="count")
+    counts = eng.query_batch(queries, spec=Count())
     t_count = time.perf_counter() - t0
     assert counts == [ids.size for ids in singles]
+
+    top3 = eng.query_batch(queries, spec=TopK(k=3, dim=0))      # oldest 3
+    sums = eng.query_batch(queries, spec=Agg("sum", dim=0))     # SUM(age)
+    for ids, t3, sm in zip(singles, top3, sums):
+        assert set(t3.tolist()) <= set(ids.tolist()) and t3.size <= 3
+        assert ids.size == 0 or abs(sm) >= 0.0
 
     print(f"\nper-query : {len(queries)/t_single:8.1f} qps")
     print(f"one batch  : {len(queries)/t_batch:8.1f} qps  "
           f"(buckets: {stats.method_counts})")
     print(f"count mode : {len(queries)/t_count:8.1f} qps  "
           f"(ints only, {sum(counts)} total matches)")
+    k = next(i for i, ids in enumerate(singles) if ids.size)
+    print(f"top-3 by age (query {k}): ids {top3[k].tolist()}, "
+          f"sum(age) = {sums[k]:.1f}")
     print(f"server B=32: {server.stats.qps:8.1f} qps  "
           f"({server.stats.n_batches} batches, "
           f"mean size {server.stats.mean_batch_size:.1f})")
@@ -73,6 +83,10 @@ def main() -> None:
     p = Planner(eng.hist, CostModel(n=10_000_000, m=5))
     for b in (1, 8, 32, 128):
         print(f"  batch {b:>3}: {p.break_even_selectivity(batch_size=b):.4%}")
+    from repro.core import Ids
+    print("result-shape shift at batch 128: "
+          f"Ids {p.break_even_selectivity(batch_size=128, spec=Ids()):.4%} "
+          f"vs Count {p.break_even_selectivity(batch_size=128, spec=Count()):.4%}")
 
 
 if __name__ == "__main__":

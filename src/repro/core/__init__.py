@@ -2,13 +2,18 @@
 
 Public API:
   * types: ``RangeQuery``, ``Dataset`` + numpy oracles
+  * result specs: ``Ids``, ``Count``, ``Mask``, ``TopK``, ``Agg``
+    (``ResultSpec`` protocol + ``register_result_spec`` extension hook)
   * engines: ``MDRQEngine`` (facade/registry), ``build_columnar_scan``,
     ``build_kdtree``, ``build_rstar``, ``build_vafile``, ``DistributedScan``
   * access-path layer: ``AccessPath`` protocol + adapters (``core.paths``)
   * planning: ``Planner``, ``Histograms``, ``CostModel``, ``BatchPlan``
 """
-from repro.core.types import (Dataset, QueryBatch, RangeQuery, RESULT_MODES,
-                              match_ids_np, match_mask_np, validate_mode)
+from repro.core.types import (Agg, Count, Dataset, Ids, Mask, QueryBatch,
+                              RangeQuery, RESULT_MODES, ResultSpec, TopK,
+                              match_ids_np, match_mask_np,
+                              register_result_spec, resolve_spec,
+                              validate_mode)
 from repro.core.engine import MDRQEngine, ALL_METHODS, BatchStats
 from repro.core.paths import AccessPath, PerQueryPath, PlanInputs
 from repro.core.scan import build_columnar_scan, build_row_scan
@@ -21,7 +26,9 @@ from repro.core.distributed import DistributedScan, make_data_mesh
 
 __all__ = [
     "Dataset", "QueryBatch", "RangeQuery", "RESULT_MODES", "match_ids_np",
-    "match_mask_np", "validate_mode",
+    "match_mask_np", "validate_mode", "resolve_spec",
+    "ResultSpec", "Ids", "Count", "Mask", "TopK", "Agg",
+    "register_result_spec",
     "MDRQEngine", "ALL_METHODS", "BatchStats",
     "AccessPath", "PerQueryPath", "PlanInputs",
     "build_columnar_scan", "build_row_scan", "build_kdtree", "build_rstar",

@@ -135,66 +135,70 @@ def _pad_visit_list(
     return qids_p, bids_p
 
 
-def _launch_fused_visit(
-    data_dev: jax.Array,
-    qids_p: np.ndarray,
-    bids_p: np.ndarray,
-    batch: T.QueryBatch,
-    tile_n: int,
-) -> jax.Array:
-    """One ``multi_range_scan_visit`` launch over a padded visit list; the
-    (V_pad, tile_n) masks stay on device for the caller to reduce or fetch."""
-    lo_d, up_d = ops.batch_bounds_device(batch, data_dev.shape[0],
-                                         data_dev.dtype,
-                                         q_pad=_next_pow2(len(batch)))
-    return ops.multi_range_scan_visit(
-        data_dev, jnp.asarray(qids_p), jnp.asarray(bids_p), lo_d, up_d,
-        tile_n=tile_n,
-    )
+def _build_visit_index(query_ids: np.ndarray, n_queries: int,
+                       n_visit_pad: int) -> np.ndarray:
+    """(n_queries, M) table of padded-visit row indices per query.
 
-
-def run_fused_visit(
-    data_dev: jax.Array,
-    query_ids: np.ndarray,
-    block_ids: np.ndarray,
-    batch: T.QueryBatch,
-    tile_n: int,
-) -> np.ndarray:
-    """One fused refinement launch over a flattened (query, block) visit list.
-
-    Shared head of every batched two-phase path (tree and VA-file): pads the
-    visit list to a pow2 bucket (padding rows: query 0, block -1, dropped
-    from the output) and the bounds' query axis likewise, then returns the
-    (V, tile_n) int8 masks for the real visits only.
+    M is the pow2-padded maximum visit count of any query (bounds jit
+    retraces); empty slots point at row ``n_visit_pad`` — the sentinel fill
+    row the top-k visit reducer appends. One argsort pass, no Python loop
+    over queries.
     """
-    qids_p, bids_p = _pad_visit_list(query_ids, block_ids)
-    masks = _launch_fused_visit(data_dev, qids_p, bids_p, batch, tile_n)
-    return ops.device_get(masks)[: query_ids.size]
+    counts = np.bincount(query_ids, minlength=n_queries)
+    m_vis = _next_pow2(max(int(counts.max(initial=0)), 1))
+    index = np.full((n_queries, m_vis), n_visit_pad, np.int32)
+    order = np.argsort(query_ids, kind="stable")
+    starts = np.zeros(n_queries + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    slots = np.arange(query_ids.size) - starts[query_ids[order]]
+    index[query_ids[order], slots] = order.astype(np.int32)
+    return index
 
 
-def run_fused_visit_counts(
+def reduce_visits_batch(
     data_dev: jax.Array,
     query_ids: np.ndarray,
     block_ids: np.ndarray,
     batch: T.QueryBatch,
     tile_n: int,
     n_queries: int,
-) -> np.ndarray:
-    """Count-only fused refinement: one launch, per-query match counts.
+    spec: T.ResultSpec,
+    n: int,
+    perm: np.ndarray | None = None,
+) -> list:
+    """Phase 2 of every batched two-phase path, under any ResultSpec.
 
-    The (V, tile_n) visit masks are reduced to (n_queries,) int counts *on
-    device* (segment-add by query id, padding visits zeroed) — no per-visit
-    mask readback and no host-side ``nonzero``; the only host transfer is the
-    count vector itself.
+    Pads the flattened (query, block) visit list to a pow2 bucket, runs ONE
+    ``ops.multi_visit_reduce`` launch (the visit kernel + the spec's
+    on-device visit reducer in the same jit), fetches the payload in one
+    host sync, and finalizes per query. Shared by the tree MDIS and the
+    VA-file so a new result shape lands on both at once.
     """
+    if query_ids.size == 0:
+        return [spec.empty_result(n) for _ in range(n_queries)]
     qids_p, bids_p = _pad_visit_list(query_ids, block_ids)
-    masks = _launch_fused_visit(data_dev, qids_p, bids_p, batch, tile_n)
     q_bucket = _next_pow2(max(n_queries, 1))  # pow2 bounds jit retraces
-    counts = ops.visit_counts(
-        masks, jnp.asarray(qids_p), jnp.asarray((bids_p >= 0).astype(np.int32)),
-        q_bucket,
+    # The per-query visit-index table only feeds TopK's gather; every other
+    # spec ignores it, so it is built (and shipped) on demand — a (1, 1)
+    # placeholder keeps the jit signature stable for the rest.
+    if spec.needs_visit_index:
+        visit_index = _build_visit_index(query_ids.astype(np.int64), q_bucket,
+                                         qids_p.size)
+    else:
+        visit_index = np.zeros((1, 1), np.int32)
+    lo_d, up_d = ops.batch_bounds_device(batch, data_dev.shape[0],
+                                         data_dev.dtype,
+                                         q_pad=_next_pow2(len(batch)))
+    payload = ops.multi_visit_reduce(
+        data_dev, jnp.asarray(qids_p), jnp.asarray(bids_p),
+        jnp.asarray((bids_p >= 0).astype(np.int32)),
+        jnp.asarray(visit_index), lo_d, up_d,
+        spec=spec, tile_n=tile_n, n_queries=q_bucket,
     )
-    return ops.device_get(counts)[:n_queries].astype(np.int64)
+    host = ops.device_get(payload)
+    return spec.finalize_visits(host, T.VisitHostCtx(
+        qids=query_ids.astype(np.int32), bids=block_ids.astype(np.int32),
+        tile_n=tile_n, n=n, n_queries=n_queries, perm=perm))
 
 
 def scatter_visit_results(
@@ -311,18 +315,19 @@ class BlockedIndex:
         # padding visits (id -1, clamped to block 0) are sliced off on device
         return int(ops.device_get(jnp.sum(masks[: survivors.size] != 0)))
 
-    def query_batch(self, batch: T.QueryBatch, mode: str = "ids"
-                    ) -> list[np.ndarray] | list[int]:
+    def query_batch(self, batch: T.QueryBatch, spec: T.ResultSpec = T.IDS
+                    ) -> list:
         """Batched two-phase query: one prune jit + one fused visit launch.
 
-        Phase 1 prunes all Q queries' hierarchies in a single vectorized call;
-        phase 2 flattens the surviving (query, block) pairs into one
-        ``multi_range_scan_visit`` launch, so the per-query dispatch and
-        host-sync taxes are paid once per batch. ``mode="count"`` reduces the
-        visit masks to per-query counts on device instead of materializing id
-        arrays (no host-side ``nonzero`` over result sets).
+        Phase 1 prunes all Q queries' hierarchies in a single vectorized
+        call; phase 2 flattens the surviving (query, block) pairs into one
+        ``multi_visit_reduce`` launch that carries the ResultSpec's
+        on-device reducer, so per-query dispatch and host-sync taxes are
+        paid once per batch and reduced shapes (count, top-k, aggregate)
+        ship only their payload. Positions map through ``perm`` in the
+        spec's finalizer (counts and aggregates are permutation-invariant).
         """
-        T.validate_mode(mode)
+        spec = T.validate_mode(spec).validate(self.m)
         q_n = len(batch)
         q_pad = _next_pow2(q_n)  # pow2 query bucket bounds jit retraces
         qlo, qhi = batch.bounds_columnar(self.m, q_pad)
@@ -332,20 +337,9 @@ class BlockedIndex:
         ))[:q_n]  # (Q, n_leaves); padding queries are match-all -> dropped
         qids, bids = np.nonzero(leaf_mask)
         self.last_visited_blocks = int(qids.size)
-        if qids.size == 0:
-            if mode == "count":
-                return [0] * q_n
-            return [np.empty((0,), np.int64) for _ in range(q_n)]
-        if mode == "count":
-            counts = run_fused_visit_counts(
-                self.data_dev, qids.astype(np.int32), bids.astype(np.int32),
-                batch, self.tile_n, q_n,
-            )
-            return [int(c) for c in counts]
-        masks = run_fused_visit(self.data_dev, qids, bids, batch, self.tile_n)
-        return scatter_visit_results(
-            masks, qids.astype(np.int32), bids.astype(np.int32),
-            q_n, self.tile_n, self.n, self.perm,
+        return reduce_visits_batch(
+            self.data_dev, qids.astype(np.int32), bids.astype(np.int32),
+            batch, self.tile_n, q_n, spec, self.n, perm=self.perm,
         )
 
 

@@ -249,6 +249,49 @@ distributed_multi_counts = ops.counted(
 )(_distributed_multi_counts_jit)
 
 
+@functools.partial(jax.jit, static_argnames=("mesh", "spec", "tile_n",
+                                             "interpret"))
+def _distributed_multi_reduce_jit(
+    mesh: Mesh,
+    data_sharded: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    spec,
+    tile_n: int = 1024,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = ops.default_interpret()
+
+    def local_reduce(data_local, lo, up):
+        mask = _local_multi_scan(data_local, lo, up, tile_n=tile_n,
+                                 interpret=interpret)
+        # Shard-local partials + the spec's collective merge (psum counts,
+        # pmin/pmax/psum aggregates, all_gather'd (Q, k) top-k partials) —
+        # mirroring the count psum: only the reduced payload crosses the
+        # collective. Identity specs return the shard-local mask.
+        return spec.distributed_reduce(mask, data_local, "data")
+
+    fn = shard_map_compat(
+        local_reduce,
+        mesh=mesh,
+        in_specs=(P(None, "data"), P(), P()),
+        # Ids/Mask payloads stay sharded over objects (the paper's "partial
+        # result sets", never concatenated); reduced payloads replicate.
+        out_specs=P(None, "data") if spec.sharded_payload else P(),
+    )
+    return fn(data_sharded, lower, upper)
+
+
+distributed_multi_reduce = ops.counted(
+    "distributed_multi_reduce",
+    "Cross-device fused batch scan + the ResultSpec's shard-local reducer "
+    "and one small collective merge in a single launch -> the spec payload "
+    "(sharded masks for Ids/Mask; replicated counts/top-k/aggregates).",
+)(_distributed_multi_reduce_jit)
+
+
 class DistributedScan:
     """Horizontally partitioned scan over a device mesh (build-once facade).
 
@@ -312,12 +355,14 @@ class DistributedScan:
                                           tile_n=self.tile_n)
         return [int(c) for c in ops.device_get(counts)[: len(batch)]]
 
-    def query_batch(self, batch, mode: str = "ids"
-                    ) -> list[np.ndarray] | list[int]:
-        T.validate_mode(mode)
-        if mode == "count":
-            return self.count_batch(batch)
+    def query_batch(self, batch, spec=T.IDS) -> list:
+        """Batched execution under any ResultSpec: one collective launch
+        (scan + the spec's shard-local reduce + its collective merge, all in
+        the same shard_map jit) and one host sync for the payload."""
+        spec = T.validate_mode(spec).validate(self.m)
+        from repro.core.scan import bucketed_batch_bounds
         batch = self._as_batch(batch)
-        masks = self.mask_batch(batch)
-        return [np.nonzero(masks[k])[0].astype(np.int64)
-                for k in range(len(batch))]
+        _, lo, up = bucketed_batch_bounds(batch, self.m_pad, self.data.dtype)
+        payload = distributed_multi_reduce(self.mesh, self.data, lo, up,
+                                           spec=spec, tile_n=self.tile_n)
+        return spec.finalize(ops.device_get(payload), len(batch), self.n)

@@ -19,10 +19,15 @@ single-query path. ``BatchStats`` splits ``plan_seconds`` from execution so
 the planning cost is visible to ``benchmarks.bench_throughput``;
 ``serve.mdrq_server`` wraps the whole thing into a throughput front end.
 
-Result modes: ``mode="ids"`` (default) returns sorted matching id arrays;
-``mode="count"`` returns per-query match counts reduced *on device* — the
-per-query host-side ``nonzero`` that dominates large result sets never runs
-(the COUNT(*) fast path of analytical workloads).
+Result shapes: every entry point takes a ``types.ResultSpec`` — ``Ids()``
+(default, the paper's §2.1 id sets), ``Count()``, ``Mask()``,
+``TopK(k, dim)``, ``Agg(op, dim)`` — pairing an on-device reducer with a
+host finalizer, so reduced shapes ship only their payload across the
+device->host boundary (the filter-then-aggregate fast path of analytical
+workloads). The legacy ``mode="ids"|"count"`` strings keep working through
+``types.validate_mode`` with a DeprecationWarning. A new result shape is a
+``register_result_spec`` subclass away — specs extend like access paths, not
+via another if/elif sweep.
 """
 from __future__ import annotations
 
@@ -78,9 +83,9 @@ class BatchStats:
         return self.n_queries / self.seconds if self.seconds > 0 else 0.0
 
 
-def _n_results(results: Sequence) -> int:
-    """Total matches across per-query results (id arrays or int counts)."""
-    return int(sum(int(r) if np.isscalar(r) else int(r.size) for r in results))
+def _n_results(spec: T.ResultSpec, results: Sequence) -> int:
+    """Total result magnitude across per-query results, typed by the spec."""
+    return int(sum(spec.result_size(r) for r in results))
 
 
 class MDRQEngine:
@@ -131,8 +136,10 @@ class MDRQEngine:
             self.register_path(paths_mod.ColumnarScanPath(self._columnar))
             self.register_path(paths_mod.VerticalScanPath(lambda: self.columnar))
         if self.rowscan is not None:
-            # no fused batch kernel for the row layout — per-query fallback
-            self.register_path(paths_mod.PerQueryPath("rowscan", self.rowscan))
+            # no fused batch kernel for the row layout — per-query fallback;
+            # host columns enable the reduced specs' from_ids finalization
+            self.register_path(paths_mod.PerQueryPath("rowscan", self.rowscan,
+                                                      cols=dataset.cols))
         for index in (self.kdtree, self.rstar):
             if index is not None:
                 self.register_path(paths_mod.BlockedIndexPath(index))
@@ -191,49 +198,75 @@ class MDRQEngine:
                 rep[name] = path.nbytes_index
         return rep
 
+    @staticmethod
+    def _path_query_batch(path, sub: T.QueryBatch, spec: T.ResultSpec) -> list:
+        """Run one bucket through a path under ``spec``.
+
+        Paths registered against the pre-ResultSpec protocol (a
+        ``query_batch(batch, mode)`` taking mode strings) still serve the
+        two legacy shapes; reduced shapes on such a path get the canonical
+        error instead of silently wrong results.
+        """
+        if paths_mod.takes_spec(path.query_batch):
+            return path.query_batch(sub, spec=spec)
+        if spec.kind in T.RESULT_MODES:
+            import warnings
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                return path.query_batch(sub, spec.kind)
+        raise ValueError(f"path {path.name!r} predates the ResultSpec "
+                         f"protocol and cannot serve spec {spec.kind!r}")
+
     def query(self, q: T.RangeQuery, method: str = "auto",
-              mode: str = "ids") -> Union[np.ndarray, int]:
-        """Execute q -> sorted matching ids (or an int count with
-        ``mode="count"``); records QueryStats."""
+              spec: Optional[T.ResultSpec] = None,
+              mode: Optional[str] = None):
+        """Execute q under a ResultSpec -> sorted ids (default ``Ids()``),
+        an int count, a bool mask, top-k ids, or an aggregate; records
+        QueryStats. ``mode="ids"|"count"`` is the deprecated string alias.
+        """
         if q.m != self.dataset.m:
             raise ValueError(f"query dims {q.m} != dataset dims {self.dataset.m}")
-        T.validate_mode(mode)
+        spec = T.resolve_spec(spec, mode).validate(self.dataset.m)
         if method == "auto":
-            plan = self.planner.explain(q)
+            plan = self.planner.explain(q, spec=spec)
             method, est = plan.method, plan.est_selectivity
         else:
             est = self.planner.hist.selectivity(q)
         path = self._path(method)
         t0 = time.perf_counter()
-        if mode == "count":
-            res: Union[np.ndarray, int] = path.count(q)
-            n_res = int(res)
+        if spec.kind == "ids":      # dedicated single-query fast paths for
+            res = path.query(q)     # the two historical shapes; every other
+        elif spec.kind == "count":  # spec rides the batch rung at Q=1
+            res = path.count(q)
         else:
-            res = path.query(q)
-            n_res = int(res.size)
+            res = self._path_query_batch(
+                path, T.QueryBatch.from_queries([q]), spec)[0]
         dt = time.perf_counter() - t0
         self.last_stats = QueryStats(method=method, seconds=dt,
-                                     n_results=n_res, est_selectivity=est)
+                                     n_results=spec.result_size(res),
+                                     est_selectivity=est)
         return res
 
     def query_batch(
         self,
         queries: Union[T.QueryBatch, Sequence[T.RangeQuery]],
         method: str = "auto",
-        mode: str = "ids",
-    ) -> Union[list[np.ndarray], list[int]]:
-        """Execute a batch of queries -> per-query sorted id arrays (or int
-        counts with ``mode="count"``).
+        spec: Optional[T.ResultSpec] = None,
+        mode: Optional[str] = None,
+    ) -> list:
+        """Execute a batch of queries under a ResultSpec -> per-query typed
+        results (sorted id arrays by default).
 
         Queries are bucketed by access path (the planner's vectorized
-        fixpoint under realized-bucket cost amortization when
+        fixpoint under realized-bucket, spec-aware cost amortization when
         ``method="auto"``, or the explicit method for all) and each bucket
-        runs through a single fused multi-query launch. Results are
-        positionally aligned with the input and identical to per-query
-        ``query`` calls; aggregate ``BatchStats`` land in
-        ``last_batch_stats`` with the planning share in ``plan_seconds``.
+        runs through a single fused multi-query launch carrying the spec's
+        on-device reducer. Results are positionally aligned with the input
+        and identical to per-query ``query`` calls; aggregate ``BatchStats``
+        land in ``last_batch_stats`` with the planning share in
+        ``plan_seconds``.
         """
-        T.validate_mode(mode)
+        spec = T.resolve_spec(spec, mode)
         if isinstance(queries, T.QueryBatch):
             batch = queries
         else:
@@ -244,9 +277,10 @@ class MDRQEngine:
             return []
         if batch.m != self.dataset.m:
             raise ValueError(f"batch dims {batch.m} != dataset dims {self.dataset.m}")
+        spec.validate(self.dataset.m)
         t0 = time.perf_counter()
         if method == "auto":
-            methods = self.planner.plan_batch(batch).methods
+            methods = self.planner.plan_batch(batch, spec=spec).methods
         else:
             self._path(method)  # raises on unknown names before any work
             methods = [method] * len(batch)
@@ -259,14 +293,16 @@ class MDRQEngine:
         results: list = [None] * len(batch)
         for meth, idxs in buckets.items():
             sub = T.QueryBatch(batch.lower[idxs], batch.upper[idxs])
-            for k, res in zip(idxs, self._path(meth).query_batch(sub, mode=mode)):
+            for k, res in zip(idxs,
+                              self._path_query_batch(self._path(meth), sub,
+                                                     spec)):
                 results[k] = res
         dt = time.perf_counter() - t0
         self.last_batch_stats = BatchStats(
             n_queries=len(batch),
             seconds=dt,
             method_counts={m: len(ix) for m, ix in buckets.items()},
-            n_results=_n_results(results),
+            n_results=_n_results(spec, results),
             plan_seconds=plan_dt,
         )
         return results

@@ -31,13 +31,40 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
+import functools
+import inspect
 from typing import Any, Callable, Protocol, Union, runtime_checkable
 
 import numpy as np
 
 from repro.core import types as T
 
-Results = Union["list[np.ndarray]", "list[int]"]
+
+@functools.lru_cache(maxsize=None)
+def _fn_takes_spec(fn) -> bool:
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # builtins / C callables
+        return False
+    return "spec" in params or any(p.kind == p.VAR_KEYWORD
+                                   for p in params.values())
+
+
+def takes_spec(method) -> bool:
+    """Whether a path hook (``query_batch``/``cost``/``cost_batch``) accepts
+    the ``spec`` argument of the ResultSpec protocol.
+
+    Paths registered against the pre-spec protocol keep working — the engine
+    serves them the two legacy shapes and the planner prices them as Ids.
+    The signature probe is cached on the underlying function object (a
+    path's signature cannot change after registration), so the execution
+    and planning hot paths never re-run ``inspect``.
+    """
+    return _fn_takes_spec(getattr(method, "__func__", method))
+
+# Per-query results under some ResultSpec: id arrays (Ids/TopK), ints
+# (Count), bool masks (Mask), or floats (Agg).
+Results = Union["list[np.ndarray]", "list[int]", "list[float]"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,10 +97,13 @@ class PlanInputs:
 class AccessPath(Protocol):
     """What the engine registry and the planner require of a path.
 
-    Execution surface: ``query``/``count`` singles and ``query_batch`` (one
-    fused launch per bucket; ``mode`` in ``types.RESULT_MODES``). Planning
-    surface: ``cost`` (scalar) and ``cost_batch`` (vectorized over a
-    ``PlanInputs``). ``PerQueryPath`` adapts anything that only has singles.
+    Execution surface: ``query``/``count`` singles and
+    ``query_batch(batch, spec)`` (one fused launch per bucket; ``spec`` is a
+    ``types.ResultSpec`` — ids, count, mask, top-k, aggregate — whose
+    on-device reducer the path's launch carries). Planning surface: ``cost``
+    (scalar) and ``cost_batch`` (vectorized over a ``PlanInputs``), both
+    taking the spec so reduced result shapes price their smaller host
+    payload. ``PerQueryPath`` adapts anything that only has singles.
     """
 
     name: str
@@ -87,51 +117,63 @@ class AccessPath(Protocol):
 
     def count(self, q: T.RangeQuery) -> int: ...
 
-    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results: ...
+    def query_batch(self, batch: T.QueryBatch,
+                    spec: T.ResultSpec = T.IDS) -> Results: ...
 
-    def cost(self, q: T.RangeQuery, sel: float, batch: int, model) -> float: ...
+    def cost(self, q: T.RangeQuery, sel: float, batch: int, model,
+             spec: T.ResultSpec = T.IDS) -> float: ...
 
-    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model) -> np.ndarray: ...
+    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model,
+                   spec: T.ResultSpec = T.IDS) -> np.ndarray: ...
 
 
 # -- cost mixins --------------------------------------------------------------
 # One mixin per cost shape, delegating to the CostModel formulas so the real
 # paths here and the planner's structure-free stubs cannot drift apart.
 # ``bucket`` is the (Q,) per-query amortization size the planner's fixpoint
-# converged on (realized bucket sizes, not the whole batch).
+# converged on (realized bucket sizes, not the whole batch). ``spec`` threads
+# into the CostModel so each path's result-payload/host-sync bytes are priced
+# per result shape (reduced specs read back O(k) instead of a mask).
 
 class ScanCost:
     """Full fused scan: cost is query-independent except for amortization."""
 
-    def cost(self, q: T.RangeQuery, sel: float, batch: int, model) -> float:
-        return model.cost_scan(q, batch=batch)
+    def cost(self, q: T.RangeQuery, sel: float, batch: int, model,
+             spec: T.ResultSpec = T.IDS) -> float:
+        return model.cost_scan(q, batch=batch, spec=spec)
 
-    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model) -> np.ndarray:
-        return model.cost_scan_batch(len(pi), bucket)
+    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model,
+                   spec: T.ResultSpec = T.IDS) -> np.ndarray:
+        return model.cost_scan_batch(len(pi), bucket, spec=spec)
 
 
 class VerticalScanCost:
     """Partial-match scan: touches only constrained columns; inapplicable
     (inf) to complete-match queries, where it degenerates to the full scan."""
 
-    def cost(self, q: T.RangeQuery, sel: float, batch: int, model) -> float:
+    def cost(self, q: T.RangeQuery, sel: float, batch: int, model,
+             spec: T.ResultSpec = T.IDS) -> float:
         if q.is_complete_match:
             return float("inf")
-        return model.cost_scan_vertical(q, batch=batch)
+        return model.cost_scan_vertical(q, batch=batch, spec=spec)
 
-    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model) -> np.ndarray:
+    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model,
+                   spec: T.ResultSpec = T.IDS) -> np.ndarray:
         return np.where(pi.is_complete, np.inf,
-                        model.cost_scan_vertical_batch(pi.mq, bucket))
+                        model.cost_scan_vertical_batch(pi.mq, bucket,
+                                                       spec=spec))
 
 
 class TreeCost:
     """Blocked tree MDIS (kd-tree / R*-tree): prune + visit two-phase cost."""
 
-    def cost(self, q: T.RangeQuery, sel: float, batch: int, model) -> float:
-        return model.cost_tree(q, sel, batch=batch)
+    def cost(self, q: T.RangeQuery, sel: float, batch: int, model,
+             spec: T.ResultSpec = T.IDS) -> float:
+        return model.cost_tree(q, sel, batch=batch, spec=spec)
 
-    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model) -> np.ndarray:
-        return model.cost_tree_batch(pi.sels, pi.mq, bucket)
+    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model,
+                   spec: T.ResultSpec = T.IDS) -> np.ndarray:
+        return model.cost_tree_batch(pi.sels, pi.mq, bucket, spec=spec)
 
 
 class VAFileCost:
@@ -139,11 +181,14 @@ class VAFileCost:
 
     hist: Any  # Histograms — the scalar candidate-fraction estimate needs it
 
-    def cost(self, q: T.RangeQuery, sel: float, batch: int, model) -> float:
-        return model.cost_vafile(q, self.hist, batch=batch)
+    def cost(self, q: T.RangeQuery, sel: float, batch: int, model,
+             spec: T.ResultSpec = T.IDS) -> float:
+        return model.cost_vafile(q, self.hist, batch=batch, spec=spec)
 
-    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model) -> np.ndarray:
-        return model.cost_vafile_batch(pi.dim_sels, pi.dims_mask, bucket)
+    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model,
+                   spec: T.ResultSpec = T.IDS) -> np.ndarray:
+        return model.cost_vafile_batch(pi.dim_sels, pi.dims_mask, bucket,
+                                       spec=spec)
 
 
 # -- adapters over the concrete structures ------------------------------------
@@ -168,8 +213,9 @@ class ColumnarScanPath(ScanCost):
     def count(self, q: T.RangeQuery) -> int:
         return self._scan.count(q)
 
-    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results:
-        return self._scan.query_batch(batch, mode=mode)
+    def query_batch(self, batch: T.QueryBatch,
+                    spec: T.ResultSpec = T.IDS) -> Results:
+        return self._scan.query_batch(batch, spec=spec)
 
 
 class DistributedScanPath(ScanCost):
@@ -193,8 +239,9 @@ class DistributedScanPath(ScanCost):
     def count(self, q: T.RangeQuery) -> int:
         return self._dist.count(q)
 
-    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results:
-        return self._dist.query_batch(batch, mode=mode)
+    def query_batch(self, batch: T.QueryBatch,
+                    spec: T.ResultSpec = T.IDS) -> Results:
+        return self._dist.query_batch(batch, spec=spec)
 
 
 class VerticalScanPath(VerticalScanCost):
@@ -223,8 +270,9 @@ class VerticalScanPath(VerticalScanCost):
     def count(self, q: T.RangeQuery) -> int:
         return self._scan_ref().count_partial(q)
 
-    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results:
-        return self._scan_ref().query_batch(batch, partial=True, mode=mode)
+    def query_batch(self, batch: T.QueryBatch,
+                    spec: T.ResultSpec = T.IDS) -> Results:
+        return self._scan_ref().query_batch(batch, partial=True, spec=spec)
 
 
 class BlockedIndexPath(TreeCost):
@@ -247,8 +295,9 @@ class BlockedIndexPath(TreeCost):
     def count(self, q: T.RangeQuery) -> int:
         return self._index.count(q)
 
-    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results:
-        return self._index.query_batch(batch, mode=mode)
+    def query_batch(self, batch: T.QueryBatch,
+                    spec: T.ResultSpec = T.IDS) -> Results:
+        return self._index.query_batch(batch, spec=spec)
 
 
 class VAFilePath(VAFileCost):
@@ -272,8 +321,9 @@ class VAFilePath(VAFileCost):
     def count(self, q: T.RangeQuery) -> int:
         return self._vafile.count(q)
 
-    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results:
-        return self._vafile.query_batch(batch, mode=mode)
+    def query_batch(self, batch: T.QueryBatch,
+                    spec: T.ResultSpec = T.IDS) -> Results:
+        return self._vafile.query_batch(batch, spec=spec)
 
 
 class PerQueryPath:
@@ -282,7 +332,10 @@ class PerQueryPath:
 
     This is the fallback rung of the layer — structures without a fused batch
     kernel (``RowScan``, prototypes, test doubles) still ride the registry,
-    paying Q launches instead of one. Not plannable by default: a path whose
+    paying Q launches instead of one. Reduced result shapes ride the spec's
+    *host* fallback: ids materialize per query and ``ResultSpec.from_ids``
+    finalizes against the host columns (pass ``cols`` to enable — specs that
+    read attribute values need it). Not plannable by default: a path whose
     batch cost is Q times its single cost should stay an explicit opt-in
     until it prices itself (subclass and override ``cost``/``cost_batch``,
     then pass ``plannable=True``).
@@ -290,10 +343,12 @@ class PerQueryPath:
 
     owns_storage = True
 
-    def __init__(self, name: str, impl, plannable: bool = False):
+    def __init__(self, name: str, impl, plannable: bool = False,
+                 cols: np.ndarray | None = None):
         self.name = name
         self._impl = impl
         self.plannable = plannable
+        self._cols = cols
 
     @property
     def nbytes_index(self) -> int:
@@ -305,15 +360,26 @@ class PerQueryPath:
     def count(self, q: T.RangeQuery) -> int:
         return self._impl.count(q)
 
-    def query_batch(self, batch: T.QueryBatch, mode: str = "ids") -> Results:
-        T.validate_mode(mode)
-        if mode == "count":
+    def query_batch(self, batch: T.QueryBatch,
+                    spec: T.ResultSpec = T.IDS) -> Results:
+        spec = T.validate_mode(spec)
+        if spec.kind == "ids":
+            return [self.query(batch[k]) for k in range(len(batch))]
+        if spec.kind == "count":
+            # the impl's own count (device-reduced where it has one)
             return [self.count(batch[k]) for k in range(len(batch))]
-        return [self.query(batch[k]) for k in range(len(batch))]
+        if self._cols is None:
+            raise ValueError(
+                f"path {self.name!r} has no host columns for result spec "
+                f"{spec.kind!r}; construct PerQueryPath(..., cols=...)")
+        return [spec.from_ids(self.query(batch[k]), self._cols)
+                for k in range(len(batch))]
 
     # A plannable=False path is never priced; keep the protocol total anyway.
-    def cost(self, q: T.RangeQuery, sel: float, batch: int, model) -> float:
+    def cost(self, q: T.RangeQuery, sel: float, batch: int, model,
+             spec: T.ResultSpec = T.IDS) -> float:
         return float("inf")
 
-    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model) -> np.ndarray:
+    def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model,
+                   spec: T.ResultSpec = T.IDS) -> np.ndarray:
         return np.full((len(pi),), np.inf)

@@ -196,11 +196,30 @@ class CostModel:
     visit_bw_discount: float = 0.6     # scattered tile DMA vs streaming scan
     sec_per_cmp: float = 2.5e-13       # VPU compare+AND per element (~4e12/s)
     collective_overhead: float = 5e-6  # per-launch shard_map dispatch + psum tax
+    # Device->host payload + host-materialization rate (PCIe-ish, far below
+    # HBM): what the ResultSpec layer's output-bytes term multiplies. Reduced
+    # specs (count / top-k / aggregate) read back O(1)-O(k) bytes per query
+    # where Ids/Mask read back the whole (or visited-fraction of the) mask —
+    # this term is what makes ``plan_batch`` spec-dependent.
+    sec_per_result_byte: float = 1.0 / 16e9
 
     def _bytes_cost(self, nbytes: float, dispatches: float = 1.0,
                     batch: int = 1) -> float:
         return (nbytes * self.sec_per_byte
                 + dispatches * self.dispatch_overhead / max(batch, 1))
+
+    def spec_host_cost(self, spec, touched):
+        """Result-payload seconds for ``spec`` on a path whose identity
+        (mask) readback would be ``touched`` bytes (scalar or (Q,) array).
+
+        ``spec=None`` prices the pure kernel side (the pre-spec cost surface
+        — ``break_even_selectivity`` defaults to it so the recorded
+        batch/device break-even tables stay comparable across PRs).
+        """
+        if spec is None:
+            return np.zeros_like(np.asarray(touched, np.float64)) \
+                if isinstance(touched, np.ndarray) else 0.0
+        return spec.host_bytes(touched, self.n) * self.sec_per_result_byte
 
     def leaf_side(self) -> float:
         return (self.tile_n / max(self.n, 1)) ** (1.0 / max(self.m, 1))
@@ -245,20 +264,23 @@ class CostModel:
         return cost
 
     def cost_scan(self, q: T.RangeQuery, batch: int = 1,
-                  n_devices: int | None = None) -> float:
-        return self._scan_cost(self.n * self.m, batch, n_devices)
+                  n_devices: int | None = None, spec=None) -> float:
+        return self._scan_cost(self.n * self.m, batch, n_devices) \
+            + self.spec_host_cost(spec, float(self.n))
 
     def cost_scan_vertical(self, q: T.RangeQuery, batch: int = 1,
-                           n_devices: int | None = None) -> float:
+                           n_devices: int | None = None, spec=None) -> float:
         # The distributed path implements only the full fused scan, so the
         # vertical scan executes on one device regardless of the mesh —
         # default to 1 here (not ``self.n_devices``) so the planner's cost
         # matches what actually runs; pass n_devices for what-if analysis.
         mq = max(q.n_queried_dims, 1)
         return self._scan_cost(self.n * mq, batch,
-                               n_devices if n_devices is not None else 1)
+                               n_devices if n_devices is not None else 1) \
+            + self.spec_host_cost(spec, float(self.n))
 
-    def cost_tree(self, q: T.RangeQuery, sel: float, batch: int = 1) -> float:
+    def cost_tree(self, q: T.RangeQuery, sel: float, batch: int = 1,
+                  spec=None) -> float:
         n_leaves = -(-self.n // self.tile_n)
         # Batched prune reads the MBR hierarchy once per batch.
         prune = 2 * n_leaves * self.m * self.bytes_per_val / max(batch, 1)
@@ -266,9 +288,11 @@ class CostModel:
         # Refinement visits are per query (each query has its own leaf list).
         refine = f * self.n * self.m * self.bytes_per_val / self.visit_bw_discount
         return self._bytes_cost(prune + refine, dispatches=2.0, batch=batch) \
-            + self.host_sync_overhead / max(batch, 1)
+            + self.host_sync_overhead / max(batch, 1) \
+            + self.spec_host_cost(spec, f * self.n)
 
-    def cost_vafile(self, q: T.RangeQuery, hist: Histograms, batch: int = 1) -> float:
+    def cost_vafile(self, q: T.RangeQuery, hist: Histograms, batch: int = 1,
+                    spec=None) -> float:
         words = -(-self.m // VA_DIMS_PER_WORD)  # packing density of the kernel
         # Both phases are fused per batch (``multi_va_filter`` +
         # ``multi_range_scan_visit``): the packed words stream from HBM once
@@ -285,7 +309,8 @@ class CostModel:
         refine = blk_frac * self.n * self.m * self.bytes_per_val / self.visit_bw_discount
         return approx + refine * self.sec_per_byte \
             + 2.0 * self.dispatch_overhead / max(batch, 1) \
-            + self.host_sync_overhead / max(batch, 1)
+            + self.host_sync_overhead / max(batch, 1) \
+            + self.spec_host_cost(spec, blk_frac * self.n)
 
     # -- vectorized per-path costs (batch planning) ------------------------
     # Same formulas as the scalar methods, evaluated for all Q queries of a
@@ -305,13 +330,15 @@ class CostModel:
         return cost
 
     def cost_scan_batch(self, n_queries: int, bucket: np.ndarray,
-                        n_devices: int | None = None) -> np.ndarray:
+                        n_devices: int | None = None, spec=None) -> np.ndarray:
         """(Q,) full fused-scan costs (query-independent except amortization)."""
         elems = np.full((n_queries,), float(self.n) * self.m)
-        return self._scan_cost_batch(elems, bucket, n_devices)
+        return self._scan_cost_batch(elems, bucket, n_devices) \
+            + self.spec_host_cost(spec, np.full((n_queries,), float(self.n)))
 
     def cost_scan_vertical_batch(self, mq: np.ndarray, bucket: np.ndarray,
-                                 n_devices: int | None = None) -> np.ndarray:
+                                 n_devices: int | None = None,
+                                 spec=None) -> np.ndarray:
         """(Q,) vertical-scan costs from per-query constrained-dim counts.
 
         Like the scalar method, defaults to one device: the distributed path
@@ -319,11 +346,13 @@ class CostModel:
         device regardless of the mesh.
         """
         elems = float(self.n) * np.maximum(np.asarray(mq, np.float64), 1.0)
+        touched = np.full((np.asarray(mq).shape[0],), float(self.n))
         return self._scan_cost_batch(
-            elems, bucket, n_devices if n_devices is not None else 1)
+            elems, bucket, n_devices if n_devices is not None else 1) \
+            + self.spec_host_cost(spec, touched)
 
     def cost_tree_batch(self, sels: np.ndarray, mq: np.ndarray,
-                        bucket: np.ndarray) -> np.ndarray:
+                        bucket: np.ndarray, spec=None) -> np.ndarray:
         """(Q,) blocked-tree costs from per-query selectivities + dim counts."""
         b = np.maximum(np.asarray(bucket, np.float64), 1.0)
         n_leaves = -(-self.n // self.tile_n)
@@ -334,10 +363,11 @@ class CostModel:
         refine = f * self.n * self.m * self.bytes_per_val / self.visit_bw_discount
         return (prune + refine) * self.sec_per_byte \
             + 2.0 * self.dispatch_overhead / b \
-            + self.host_sync_overhead / b
+            + self.host_sync_overhead / b \
+            + self.spec_host_cost(spec, f * self.n)
 
     def cost_vafile_batch(self, dim_sels: np.ndarray, dims_mask: np.ndarray,
-                          bucket: np.ndarray) -> np.ndarray:
+                          bucket: np.ndarray, spec=None) -> np.ndarray:
         """(Q,) VA-file costs from (Q, m) per-dim selectivities."""
         b = np.maximum(np.asarray(bucket, np.float64), 1.0)
         words = -(-self.m // VA_DIMS_PER_WORD)
@@ -354,7 +384,8 @@ class CostModel:
             / self.visit_bw_discount
         return approx + refine * self.sec_per_byte \
             + 2.0 * self.dispatch_overhead / b \
-            + self.host_sync_overhead / b
+            + self.host_sync_overhead / b \
+            + self.spec_host_cost(spec, blk_frac * self.n)
 
 
 @dataclasses.dataclass
@@ -492,14 +523,25 @@ class Planner:
     def _plannable(self) -> list:
         return [(name, p) for name, p in self._paths.items() if p.plannable]
 
-    def explain(self, q: T.RangeQuery, batch_size: int = 1) -> Plan:
+    # Pre-spec paths are priced as if every result were Ids (their
+    # historical behavior) rather than erroring out of the planner; the
+    # signature probe is cached per function (see ``paths.takes_spec``).
+    _takes_spec = staticmethod(paths_mod.takes_spec)
+
+    def explain(self, q: T.RangeQuery, batch_size: int = 1,
+                spec: T.ResultSpec = T.IDS) -> Plan:
         """Rank access paths for q; ``batch_size`` amortizes the fixed taxes
-        (and fused-scan bytes) over a batch of concurrently executed queries.
-        Paths pricing themselves inf (not applicable) are omitted."""
+        (and fused-scan bytes) over a batch of concurrently executed queries,
+        and ``spec`` prices the result payload (reduced shapes read back
+        O(k) bytes where Ids reads back a mask). Paths pricing themselves
+        inf (not applicable) are omitted."""
         sel = self.hist.selectivity(q)
         costs: dict[str, float] = {}
         for name, p in self._plannable():
-            c = float(p.cost(q, sel, batch_size, self.model))
+            if self._takes_spec(p.cost):
+                c = float(p.cost(q, sel, batch_size, self.model, spec=spec))
+            else:
+                c = float(p.cost(q, sel, batch_size, self.model))
             if np.isfinite(c):
                 costs[name] = c
         if not costs:
@@ -517,7 +559,8 @@ class Planner:
             lower=batch.lower, upper=batch.upper, dims_mask=dims_mask,
             mq=dims_mask.sum(axis=1), dim_sels=dim_sels, sels=sels)
 
-    def plan_batch(self, batch, max_iters: int = 4) -> BatchPlan:
+    def plan_batch(self, batch, max_iters: int = 4,
+                   spec: T.ResultSpec = T.IDS) -> BatchPlan:
         """Plan a whole batch: vectorized costs + plan -> bucket -> replan.
 
         Iteration 1 prices every path under whole-batch amortization (the
@@ -544,13 +587,15 @@ class Planner:
         converged = False
         costs = np.empty((len(entries), q_n), np.float64)
         n_iterations = 0
+        takes_spec = [self._takes_spec(p.cost_batch) for _, p in entries]
         for n_iterations in range(1, max_iters + 1):
             for j, (_, p) in enumerate(entries):
                 bucket = (np.full((q_n,), float(q_n)) if assign is None
                           else sizes[j] + (assign != j))
-                costs[j] = np.broadcast_to(
-                    np.asarray(p.cost_batch(pi, bucket, self.model),
-                               np.float64), (q_n,))
+                c = (p.cost_batch(pi, bucket, self.model, spec=spec)
+                     if takes_spec[j]
+                     else p.cost_batch(pi, bucket, self.model))
+                costs[j] = np.broadcast_to(np.asarray(c, np.float64), (q_n,))
             # NaN costs count as inapplicable, exactly like the scalar
             # ``explain``'s isfinite filter — otherwise argmin would treat
             # NaN as the minimum and silently assign the broken path.
@@ -577,14 +622,15 @@ class Planner:
             costs=costs,
         )
 
-    def explain_batch(self, queries) -> list[Plan]:
+    def explain_batch(self, queries, spec: T.ResultSpec = T.IDS) -> list[Plan]:
         """Per-query plans under whole-batch amortization — literally
         iteration 1 of ``plan_batch``'s fixpoint, reshaped into Plans (kept
         for cost introspection: every Plan carries the per-path cost dict)."""
         queries = list(queries)
         if not queries:
             return []
-        bp = self.plan_batch(T.QueryBatch.from_queries(queries), max_iters=1)
+        bp = self.plan_batch(T.QueryBatch.from_queries(queries), max_iters=1,
+                             spec=spec)
         plans = []
         for k in range(len(queries)):
             cd = {name: float(bp.costs[j, k])
@@ -601,7 +647,8 @@ class Planner:
     def break_even_selectivity(self, m_q: Optional[int] = None,
                                batch_size: int = 1,
                                index_path: str = "tree",
-                               n_devices: Optional[int] = None) -> float:
+                               n_devices: Optional[int] = None,
+                               spec: Optional[T.ResultSpec] = None) -> float:
         """Selectivity where the index (``index_path``) stops beating the scan.
 
         Bisects the cost model over complete-match queries — reproduces the
@@ -620,6 +667,13 @@ class Planner:
         down — horizontal partitioning (§3.1) extends the paper's "scans win
         below ~1%" conclusion device-linearly, minus the per-launch
         collective tax.
+
+        ``spec`` adds the result-shape axis: under ``Ids()`` the scan reads
+        back an n-byte mask per query while the index reads only its visited
+        fraction, so the break-even climbs (indexes win a wider band); under
+        ``Count()``/``Agg``/``TopK`` the payload is O(1)-O(k) for every path
+        and the break-even falls back to the pure kernel-side surface
+        (``spec=None``, the default — keeps the recorded tables comparable).
         """
         mq = m_q or self.model.m
         lo_s, hi_s = 1e-8, 1.0
@@ -627,11 +681,14 @@ class Planner:
         def tree_wins(sel: float) -> bool:
             q = _synthetic_query(self.model.m, mq, sel)
             if index_path == "vafile":
-                idx_cost = self.model.cost_vafile(q, self.hist, batch=batch_size)
+                idx_cost = self.model.cost_vafile(q, self.hist,
+                                                  batch=batch_size, spec=spec)
             else:
-                idx_cost = self.model.cost_tree(q, sel, batch=batch_size)
+                idx_cost = self.model.cost_tree(q, sel, batch=batch_size,
+                                                spec=spec)
             return idx_cost < self.model.cost_scan(q, batch=batch_size,
-                                                   n_devices=n_devices)
+                                                   n_devices=n_devices,
+                                                   spec=spec)
 
         if not tree_wins(lo_s):
             return 0.0

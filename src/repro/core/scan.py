@@ -18,10 +18,13 @@ Batched execution: ``mask_batch`` / ``mask_batch_partial`` evaluate a whole
 — one launch per batch instead of one per query, with the query axis padded
 to a pow2 bucket so arbitrary batch sizes hit a bounded set of jit traces.
 
-Count-only mode: ``count`` / ``count_partial`` / ``count_batch`` reduce the
-match masks to counts *on device* (``ops.mask_counts``), so the per-query
-host-side ``nonzero`` — the dominant cost for large result sets — never runs
-and only O(Q) ints cross to the host.
+Result shapes: ``query_batch(batch, spec=...)`` takes any ``types.ResultSpec``
+— the fused kernel and the spec's on-device reducer run as one launch
+(``ops.multi_scan_reduce`` / ``multi_scan_vertical_reduce``), so counts,
+top-k, and aggregates ship only their payload across the device->host
+boundary and the per-query host-side ``nonzero`` — the dominant cost for
+large result sets — never runs. The single-query ``count`` /
+``count_partial`` / ``count_batch`` fast paths reduce via ``ops.mask_counts``.
 """
 from __future__ import annotations
 
@@ -137,12 +140,24 @@ class ColumnarScan:
         return [int(c) for c in counts]
 
     def query_batch(self, batch: T.QueryBatch, partial: bool = False,
-                    mode: str = "ids") -> list[np.ndarray] | list[int]:
-        T.validate_mode(mode)
-        if mode == "count":
-            return self.count_batch(batch, partial=partial)
-        masks = self.mask_batch_partial(batch) if partial else self.mask_batch(batch)
-        return [np.nonzero(masks[k])[0].astype(np.int64) for k in range(len(batch))]
+                    spec: T.ResultSpec = T.IDS) -> list:
+        """Batched execution under any ResultSpec: the fused multi-query
+        kernel and the spec's on-device reducer run as one launch, the
+        payload crosses in one host sync, and the spec's host finalizer
+        types the per-query results (ids / counts / masks / top-k ids /
+        aggregates)."""
+        spec = T.validate_mode(spec).validate(self.m)
+        q_pad, lo, up = bucketed_batch_bounds(batch, self.data_dev.shape[0],
+                                              self.data_dev.dtype)
+        if partial:
+            dim_ids = batch.padded_dim_ids(q_pad)
+            payload = ops.multi_scan_vertical_reduce(
+                self.data_dev, jnp.asarray(dim_ids), lo, up, spec=spec,
+                tile_n=self.tile_n)
+        else:
+            payload = ops.multi_scan_reduce(self.data_dev, lo, up, spec=spec,
+                                            tile_n=self.tile_n)
+        return spec.finalize(ops.device_get(payload), len(batch), self.n)
 
 
 def build_columnar_scan(dataset: T.Dataset, tile_n: int = 1024) -> ColumnarScan:

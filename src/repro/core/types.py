@@ -15,7 +15,8 @@ attribute, and the AND-merge across dimensions happens in-register.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+import warnings
+from typing import Any, ClassVar, Optional, Sequence
 
 import numpy as np
 import jax.numpy as jnp
@@ -23,23 +24,474 @@ import jax.numpy as jnp
 NEG_INF = np.float32(-np.inf)
 POS_INF = np.float32(np.inf)
 
-# Result modes shared by every engine entry point: "ids" materializes sorted
-# matching identifiers (the paper's result definition); "count" returns only
-# per-query match counts, reduced on device (COUNT(*) analytics fast path —
-# skips the host-side ``nonzero`` entirely).
+# Legacy result-mode strings (pre-ResultSpec protocol). Kept only for the
+# ``mode="ids"|"count"`` back-compat shim in ``validate_mode``.
 RESULT_MODES = ("ids", "count")
 
 
-def validate_mode(mode: str) -> str:
-    """Reject unknown result modes with the one canonical error.
+# =============================================================================
+# ResultSpec — the first-class result protocol (DESIGN.md §9)
+# =============================================================================
+# The paper defines an MDRQ result as the materialized id set (§2.1), but the
+# analytics workloads that motivate its scan-vs-index question mostly consume
+# that set through a *reduction* — counts, extremes, top-k by an attribute.
+# A ``ResultSpec`` names the shape a caller wants back and pairs
+#
+#   * an **on-device reducer** — applied to the (Q, n) match masks (or the
+#     (V, tile_n) two-phase visit masks) inside the same jit as the kernel
+#     that produced them, so only the reduced payload ever crosses the
+#     device->host boundary, and
+#   * a **host finalizer** — turning the fetched payload into one typed
+#     result per query,
+#
+# plus the planner's output-bytes estimate and the per-query host fallback
+# (``from_ids``) the generic ``PerQueryPath`` rung uses. Each access-path
+# shape calls a fixed protocol method — there is no per-kind if/elif sweep
+# anywhere in the engine — so a new result shape is one subclass plus
+# ``register_result_spec``, exactly like registering a new access path.
+#
+# Specs are frozen (hashable) dataclasses: they ride jax.jit static args, so
+# the reduction specializes at trace time per spec instance.
 
-    Every entry point that accepts a ``mode`` (engine singles and batches,
-    the access paths, the serving front end) validates through here, so the
-    check — and its error text — cannot drift between layers.
+RESULT_SPEC_KINDS: dict[str, type] = {}
+
+
+def register_result_spec(cls):
+    """Register a ResultSpec subclass under ``cls.kind`` (decorator).
+
+    Registration makes the kind addressable by name (``ServerStats``
+    bucketing, benchmark ``--spec`` flags) — the result-shape analogue of
+    ``MDRQEngine.register_path``.
     """
-    if mode not in RESULT_MODES:
-        raise ValueError(f"unknown mode {mode!r}; options: {RESULT_MODES}")
-    return mode
+    RESULT_SPEC_KINDS[cls.kind] = cls
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class ResultSpec:
+    """Base of the result protocol: what a query should return, and how.
+
+    Subclasses override the device reducers for the three execution shapes
+    (full masks, two-phase visit masks, sharded masks) and the matching host
+    finalizers. The base class implements the identity reduction (payload =
+    the masks themselves) so mask-shaped specs (``Ids``, ``Mask``) need no
+    device code at all.
+    """
+
+    kind: ClassVar[str] = "abstract"
+    # True when the device payload stays sharded over the object axis under
+    # shard_map (Ids/Mask); False when the reducer merges to a replicated
+    # payload through collectives (Count/TopK/Agg).
+    sharded_payload: ClassVar[bool] = False
+    # True when ``reduce_visits`` consumes the host-built (Q, M) visit-index
+    # table (TopK's gather); everyone else gets a (1, 1) placeholder so the
+    # two-phase paths skip the build + transfer.
+    needs_visit_index: ClassVar[bool] = False
+
+    @property
+    def value_dim(self) -> Optional[int]:
+        """Attribute dimension whose values the reducer reads (None = none)."""
+        return None
+
+    def validate(self, m: int) -> "ResultSpec":
+        """Check the spec against an m-dim dataset (canonical error site)."""
+        d = self.value_dim
+        if d is not None and not (0 <= d < m):
+            raise ValueError(f"{self.kind} dim {d} out of range for m={m}")
+        return self
+
+    # -- on-device reducers (called inside the fused-kernel jits) ----------
+    def device_reduce(self, masks, data_cm, *, tile_n: int, interpret: bool):
+        """(q_pad, n_pad) match masks -> device payload (identity here)."""
+        return masks
+
+    def reduce_visits(self, masks, data_cm, qids, bids, valid, visit_index,
+                      *, tile_n: int, n_queries: int, interpret: bool):
+        """(V_pad, tile_n) two-phase visit masks -> device payload."""
+        return masks
+
+    def distributed_reduce(self, mask_local, data_local, axis: str):
+        """Per-shard masks -> payload, inside shard_map (collectives OK)."""
+        return mask_local
+
+    # -- host finalizers ----------------------------------------------------
+    def finalize(self, payload, q_n: int, n: int) -> list:
+        """Host payload from the mask-shaped routes -> one result/query."""
+        raise NotImplementedError
+
+    def finalize_visits(self, payload, vctx: "VisitHostCtx") -> list:
+        """Host payload from the visit-shaped route -> one result/query.
+
+        Defaults to ``finalize`` — correct whenever the visit reducer already
+        produced the same payload shape as the mask reducer (Count/TopK/Agg).
+        """
+        return self.finalize(payload, vctx.n_queries, vctx.n)
+
+    def from_ids(self, ids: np.ndarray, cols: np.ndarray):
+        """Host fallback from a materialized id set (``PerQueryPath`` rung)."""
+        raise NotImplementedError
+
+    # -- planner surface ----------------------------------------------------
+    def host_bytes(self, touched, n: int):
+        """Estimated device->host payload + host-materialization bytes per
+        query. ``touched`` is the mask bytes the path would read back in the
+        identity reduction (n for full scans, visited-fraction * n for the
+        two-phase paths); scalar or (Q,) — the return broadcasts with it.
+        """
+        raise NotImplementedError
+
+    # -- misc ---------------------------------------------------------------
+    def empty_result(self, n: int):
+        """The result of a query with an empty candidate set."""
+        raise NotImplementedError
+
+    def result_size(self, res) -> int:
+        """Result magnitude for QueryStats/BatchStats ``n_results``."""
+        raise NotImplementedError
+
+
+@register_result_spec
+@dataclasses.dataclass(frozen=True)
+class Ids(ResultSpec):
+    """Sorted matching identifiers — the paper's §2.1 result definition."""
+
+    kind: ClassVar[str] = "ids"
+    sharded_payload: ClassVar[bool] = True
+
+    def finalize(self, payload, q_n, n):
+        return [np.nonzero(payload[k, :n])[0].astype(np.int64)
+                for k in range(q_n)]
+
+    def finalize_visits(self, payload, vctx):
+        from repro.core import blockindex  # runtime: no import cycle
+        return blockindex.scatter_visit_results(
+            payload[: vctx.qids.size], vctx.qids, vctx.bids, vctx.n_queries,
+            vctx.tile_n, vctx.n, vctx.perm)
+
+    def from_ids(self, ids, cols):
+        return ids
+
+    def host_bytes(self, touched, n):
+        # the mask readback plus the host-side nonzero sweep over it; the
+        # materialized id arrays themselves are selectivity-proportional and
+        # path-independent, so they never move a ranking
+        return 2.0 * touched
+
+    def empty_result(self, n):
+        return np.empty((0,), np.int64)
+
+    def result_size(self, res):
+        return int(res.size)
+
+
+@register_result_spec
+@dataclasses.dataclass(frozen=True)
+class Mask(ResultSpec):
+    """The raw (n,) bool match mask per query (no id materialization)."""
+
+    kind: ClassVar[str] = "mask"
+    sharded_payload: ClassVar[bool] = True
+
+    def finalize(self, payload, q_n, n):
+        return [np.asarray(payload[k, :n]) > 0 for k in range(q_n)]
+
+    def finalize_visits(self, payload, vctx):
+        from repro.core import blockindex
+        out = []
+        for ids in blockindex.scatter_visit_results(
+                payload[: vctx.qids.size], vctx.qids, vctx.bids,
+                vctx.n_queries, vctx.tile_n, vctx.n, vctx.perm):
+            m = np.zeros((vctx.n,), bool)
+            m[ids] = True
+            out.append(m)
+        return out
+
+    def from_ids(self, ids, cols):
+        m = np.zeros((cols.shape[1],), bool)
+        m[ids] = True
+        return m
+
+    def host_bytes(self, touched, n):
+        return touched + float(n)
+
+    def empty_result(self, n):
+        return np.zeros((n,), bool)
+
+    def result_size(self, res):
+        return int(res.sum())
+
+
+@register_result_spec
+@dataclasses.dataclass(frozen=True)
+class Count(ResultSpec):
+    """Per-query match counts reduced on device (COUNT(*) fast path)."""
+
+    kind: ClassVar[str] = "count"
+
+    def device_reduce(self, masks, data_cm, *, tile_n, interpret):
+        return jnp.sum(masks != 0, axis=-1).astype(jnp.int32)
+
+    def reduce_visits(self, masks, data_cm, qids, bids, valid, visit_index,
+                      *, tile_n, n_queries, interpret):
+        from repro.kernels import reducers
+        return reducers.visit_mask_counts(masks, qids, valid, n_queries)
+
+    def distributed_reduce(self, mask_local, data_local, axis):
+        import jax
+        return jax.lax.psum(
+            jnp.sum(mask_local != 0, axis=-1).astype(jnp.int32), axis)
+
+    def finalize(self, payload, q_n, n):
+        return [int(c) for c in np.asarray(payload)[:q_n]]
+
+    def from_ids(self, ids, cols):
+        return int(ids.size)
+
+    def host_bytes(self, touched, n):
+        return 4.0 * np.ones_like(np.asarray(touched, np.float64))
+
+    def empty_result(self, n):
+        return 0
+
+    def result_size(self, res):
+        return int(res)
+
+
+@register_result_spec
+@dataclasses.dataclass(frozen=True)
+class TopK(ResultSpec):
+    """Top-k matching ids ordered by attribute ``dim`` (k-largest/smallest).
+
+    The reducer fills non-matching lanes with the identity, runs a device
+    ``top_k`` over the filled values, and ships only (k values, k positions,
+    1 count) per query; the finalizer maps positions to original ids
+    (through the structure's permutation where one exists) and truncates to
+    the true match count. Ties order by ascending id (XLA top_k and the
+    numpy fallback agree).
+    """
+
+    kind: ClassVar[str] = "topk"
+    needs_visit_index: ClassVar[bool] = True
+    k: int = 1
+    dim: int = 0
+    largest: bool = True
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"TopK k must be >= 1, got {self.k}")
+
+    @property
+    def value_dim(self):
+        return self.dim
+
+    @property
+    def _fill(self) -> float:
+        return -np.inf if self.largest else np.inf
+
+    def device_reduce(self, masks, data_cm, *, tile_n, interpret):
+        from repro.kernels import reducers
+        return reducers.masked_topk(masks, data_cm[self.dim], self.k,
+                                    self.largest, tile_n=tile_n,
+                                    interpret=interpret)
+
+    def reduce_visits(self, masks, data_cm, qids, bids, valid, visit_index,
+                      *, tile_n, n_queries, interpret):
+        from repro.kernels import reducers
+        vblocks = reducers.gather_visit_values(data_cm, self.dim, bids, tile_n)
+        vals, pos = reducers.visit_topk(masks, vblocks, bids, valid,
+                                        visit_index, self.k, self.largest,
+                                        tile_n)
+        counts = reducers.visit_mask_counts(masks, qids, valid, n_queries)
+        return vals, pos, counts
+
+    def distributed_reduce(self, mask_local, data_local, axis):
+        import jax
+        lax = jax.lax
+        vals = data_local[self.dim].astype(jnp.float32)
+        filled = jnp.where(mask_local != 0, vals, self._fill)
+        key = filled if self.largest else -filled
+        kk = min(self.k, key.shape[-1])
+        v, i = lax.top_k(key, kk)  # shard-local partials, key space
+        gidx = i.astype(jnp.int32) \
+            + lax.axis_index(axis).astype(jnp.int32) * data_local.shape[-1]
+        counts = lax.psum(jnp.sum(mask_local != 0, axis=-1).astype(jnp.int32),
+                          axis)
+        vg = lax.all_gather(v, axis)      # (D, Q, kk) — the small collective
+        ig = lax.all_gather(gidx, axis)
+        d = vg.shape[0]
+        q_n = v.shape[0]
+        key_all = jnp.transpose(vg, (1, 0, 2)).reshape(q_n, d * kk)
+        idx_all = jnp.transpose(ig, (1, 0, 2)).reshape(q_n, d * kk)
+        v2, j = lax.top_k(key_all, min(self.k, d * kk))
+        idx = jnp.take_along_axis(idx_all, j, axis=1)
+        return (v2 if self.largest else -v2), idx, counts
+
+    def finalize(self, payload, q_n, n):
+        _, idx, counts = payload
+        out = []
+        for k in range(q_n):
+            c = min(int(counts[k]), idx.shape[1], self.k)
+            out.append(np.asarray(idx[k, :c]).astype(np.int64))
+        return out
+
+    def finalize_visits(self, payload, vctx):
+        vals, pos, counts = payload
+        out = []
+        for k in range(vctx.n_queries):
+            c = min(int(counts[k]), pos.shape[1], self.k)
+            p = np.asarray(pos[k, :c]).astype(np.int64)
+            out.append(vctx.perm[p] if vctx.perm is not None else p)
+        return out
+
+    def from_ids(self, ids, cols):
+        vals = cols[self.dim, ids]
+        order = np.argsort(-vals if self.largest else vals, kind="stable")
+        return ids[order[: self.k]].astype(np.int64)
+
+    def host_bytes(self, touched, n):
+        return (12.0 * self.k + 4.0) \
+            * np.ones_like(np.asarray(touched, np.float64))
+
+    def empty_result(self, n):
+        return np.empty((0,), np.int64)
+
+    def result_size(self, res):
+        return int(res.size)
+
+
+@register_result_spec
+@dataclasses.dataclass(frozen=True)
+class Agg(ResultSpec):
+    """A per-query aggregate (min | max | sum) of attribute ``dim`` over the
+    matching set. Empty matches finalize to 0.0 (sum) or NaN (min/max)."""
+
+    kind: ClassVar[str] = "agg"
+    op: str = "sum"
+    dim: int = 0
+
+    OPS: ClassVar[tuple[str, ...]] = ("min", "max", "sum")
+
+    def __post_init__(self):
+        if self.op not in self.OPS:
+            raise ValueError(f"unknown agg op {self.op!r}; options: {self.OPS}")
+
+    @property
+    def value_dim(self):
+        return self.dim
+
+    @property
+    def _fill(self) -> float:
+        return {"sum": 0.0, "min": np.inf, "max": -np.inf}[self.op]
+
+    def device_reduce(self, masks, data_cm, *, tile_n, interpret):
+        from repro.kernels import reducers
+        return reducers.masked_agg(masks, data_cm[self.dim], self.op,
+                                   tile_n=tile_n, interpret=interpret)
+
+    def reduce_visits(self, masks, data_cm, qids, bids, valid, visit_index,
+                      *, tile_n, n_queries, interpret):
+        from repro.kernels import reducers
+        vblocks = reducers.gather_visit_values(data_cm, self.dim, bids, tile_n)
+        agg = reducers.visit_agg(masks, vblocks, qids, valid, self.op,
+                                 n_queries)
+        counts = reducers.visit_mask_counts(masks, qids, valid, n_queries)
+        return agg, counts
+
+    def distributed_reduce(self, mask_local, data_local, axis):
+        import jax
+        lax = jax.lax
+        vals = data_local[self.dim].astype(jnp.float32)
+        filled = jnp.where(mask_local != 0, vals, self._fill)
+        local = {"sum": jnp.sum, "min": jnp.min, "max": jnp.max}[self.op](
+            filled, axis=-1)
+        merge = {"sum": lax.psum, "min": lax.pmin, "max": lax.pmax}[self.op]
+        counts = lax.psum(jnp.sum(mask_local != 0, axis=-1).astype(jnp.int32),
+                          axis)
+        return merge(local, axis), counts
+
+    def finalize(self, payload, q_n, n):
+        agg, counts = payload
+        out = []
+        for k in range(q_n):
+            if int(counts[k]) == 0:
+                out.append(self.empty_result(n))
+            else:
+                out.append(float(agg[k]))
+        return out
+
+    def from_ids(self, ids, cols):
+        if ids.size == 0:
+            return self.empty_result(cols.shape[1])
+        vals = cols[self.dim, ids]
+        if self.op == "sum":
+            # float32 accumulation, matching the device reducer's dtype
+            return float(np.sum(vals, dtype=np.float32))
+        return float({"min": np.min, "max": np.max}[self.op](vals))
+
+    def host_bytes(self, touched, n):
+        return 12.0 * np.ones_like(np.asarray(touched, np.float64))
+
+    def empty_result(self, n):
+        return 0.0 if self.op == "sum" else float("nan")
+
+    def result_size(self, res):
+        return 1
+
+
+# Shared default instances (hash-stable jit static args; use these instead of
+# constructing fresh specs in hot paths).
+IDS = Ids()
+COUNT = Count()
+
+# Legacy mode-string vocabulary of the pre-spec protocol.
+_MODE_SPECS: dict[str, ResultSpec] = {"ids": IDS, "count": COUNT}
+
+
+@dataclasses.dataclass(frozen=True)
+class VisitHostCtx:
+    """Host-side context ``finalize_visits`` needs to map a visit-shaped
+    payload back to per-query results (two-phase paths only)."""
+
+    qids: np.ndarray            # (V,) int32 query id per real visit
+    bids: np.ndarray            # (V,) int32 block id per real visit
+    tile_n: int
+    n: int                      # logical object count
+    n_queries: int
+    perm: Optional[np.ndarray]  # position -> original id (None = identity)
+
+
+def validate_mode(mode) -> ResultSpec:
+    """Canonicalize a result spec; the one place unknown specs are rejected.
+
+    ``ResultSpec`` instances pass through untouched. The legacy string
+    spellings ``"ids"`` / ``"count"`` map to ``Ids()`` / ``Count()`` with a
+    single ``DeprecationWarning`` (every layer hands the resolved spec
+    object down, so the warning fires once per user call, at the boundary).
+    Anything else gets the canonical error.
+    """
+    if isinstance(mode, ResultSpec):
+        return mode
+    if isinstance(mode, str) and mode in _MODE_SPECS:
+        warnings.warn(
+            f"mode={mode!r} strings are deprecated; pass a ResultSpec "
+            f"(types.{_MODE_SPECS[mode].kind.capitalize()}()) instead",
+            DeprecationWarning, stacklevel=3)
+        return _MODE_SPECS[mode]
+    raise ValueError(f"unknown mode {mode!r}; options: {RESULT_MODES} "
+                     f"or a types.ResultSpec")
+
+
+def resolve_spec(spec=None, mode=None) -> ResultSpec:
+    """Resolve the (spec=..., mode=...) kwarg pair of the public entry points.
+
+    ``spec`` is the typed protocol; ``mode`` is the deprecated string alias.
+    Both default to ``Ids()``; passing both is an error (ambiguous intent).
+    """
+    if spec is not None and mode is not None:
+        raise ValueError("pass spec= or the deprecated mode=, not both")
+    if spec is None and mode is None:
+        return IDS
+    return validate_mode(spec if spec is not None else mode)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -278,7 +730,7 @@ def finite_query_bounds(lo: np.ndarray, up: np.ndarray, dtype=np.float32):
     ``dtype`` must be the dtype the comparison actually runs in: substituting
     float32 extrema under a bfloat16 cast rounds ``finfo(f32).max`` back to
     ``+inf``, so the +inf object-padding sentinels *match* and every
-    padded-axis reduction (``mask_counts``, ``visit_counts``, psum counts)
+    padded-axis reduction (``mask_counts``, visit segment counts, psum counts)
     overcounts. ``jnp.finfo`` understands bfloat16 (ml_dtypes); extrema are
     additionally clamped into float32's finite range because these carrier
     arrays are float32 — for a wider dtype (f64 under jax x64) the f32

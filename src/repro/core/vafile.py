@@ -172,37 +172,27 @@ class VAFile:
         qids, bids = np.nonzero(surv)
         return qids.astype(np.int32), bids.astype(np.int32)
 
-    def query_batch(self, batch: T.QueryBatch, mode: str = "ids"
-                    ) -> list[np.ndarray] | list[int]:
+    def query_batch(self, batch: T.QueryBatch, spec: T.ResultSpec = T.IDS
+                    ) -> list:
         """Batched two-phase query: both phases fused, one launch each.
 
         Phase 1 is a single ``multi_va_filter`` launch for the whole batch
-        (one host sync for the (Q, n_blocks) survivor bits); phase 2 flattens
-        every surviving (query, block) pair into a single
-        ``multi_range_scan_visit`` call. All per-query dispatch and readback
-        taxes amortize over the batch. ``mode="count"`` reduces the visit
-        masks to per-query counts on device (no id materialization).
+        (one host sync for the (Q, n_blocks) survivor bits); phase 2
+        flattens every surviving (query, block) pair into a single
+        ``multi_visit_reduce`` call carrying the ResultSpec's on-device
+        reducer — reduced shapes (count, top-k, aggregate) ship only their
+        payload across the second sync. All per-query dispatch and readback
+        taxes amortize over the batch.
         """
-        from repro.core.blockindex import (run_fused_visit,
-                                           run_fused_visit_counts,
-                                           scatter_visit_results)
+        from repro.core.blockindex import reduce_visits_batch
 
-        T.validate_mode(mode)
+        spec = T.validate_mode(spec).validate(self.m)
         q_n = len(batch)
         qids, bids = self._candidate_blocks_batch(batch)
         self.last_visited_blocks = int(qids.size)
-        if qids.size == 0:
-            if mode == "count":
-                return [0] * q_n
-            return [np.empty((0,), np.int64) for _ in range(q_n)]
-        if mode == "count":
-            counts = run_fused_visit_counts(
-                self.data_dev, qids, bids, batch, self.tile_n, q_n,
-            )
-            return [int(c) for c in counts]
-        masks = run_fused_visit(self.data_dev, qids, bids, batch, self.tile_n)
-        return scatter_visit_results(
-            masks, qids, bids, q_n, self.tile_n, self.n, perm=None,
+        return reduce_visits_batch(
+            self.data_dev, qids, bids, batch, self.tile_n, q_n, spec,
+            self.n, perm=None,
         )
 
 

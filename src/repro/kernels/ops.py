@@ -79,9 +79,16 @@ def reset_counters() -> None:
     _COUNTERS.clear()
 
 
-def device_get(x) -> np.ndarray:
-    """Counted device->host transfer — the host-sync tax the cost model prices."""
+def device_get(x):
+    """Counted device->host transfer — the host-sync tax the cost model prices.
+
+    Accepts a single array or a payload pytree (tuple/list — the ResultSpec
+    reducers return e.g. ``(values, indices, counts)``); either way it is one
+    logical synchronization, counted once.
+    """
     _bump("host_sync")
+    if isinstance(x, (tuple, list)):
+        return jax.device_get(x)
     return np.asarray(x)
 
 
@@ -392,6 +399,110 @@ multi_va_filter = _counted(
 )(_multi_va_filter_jit)
 
 
+# -- fused spec-reduce launches (the ResultSpec layer's device half) ----------
+# Each op composes a mask-producing kernel with the spec's on-device reducer
+# in ONE jit (the spec is a frozen dataclass and rides as a static argument),
+# so a reduced result shape — count, top-k, aggregate — is exactly one device
+# launch and, with the single ``device_get`` of the payload, one host sync
+# per batch. The identity specs (Ids/Mask) flow through unchanged: their
+# "payload" is the mask itself.
+
+@functools.partial(jax.jit, static_argnames=("spec", "tile_n", "interpret"))
+def _multi_scan_reduce_jit(
+    data_cm: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    spec,
+    tile_n: int = _rs.DEFAULT_TILE_N,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = default_interpret()
+    if use_xla():
+        mask = _ref.multi_scan_ref(data_cm, lower, upper)
+    else:
+        mask = _ms.multi_scan_tiles(data_cm, lower, upper, tile_n=tile_n,
+                                    interpret=interpret)
+    return spec.device_reduce(mask, data_cm, tile_n=tile_n,
+                              interpret=interpret)
+
+
+multi_scan_reduce = _counted(
+    "multi_scan_reduce",
+    "Fused full scan of a query batch + the ResultSpec's on-device reducer "
+    "in one launch -> the spec's payload (masks for Ids/Mask, (Q,) counts, "
+    "(Q, k) top-k values/positions, (Q,) aggregates).",
+)(_multi_scan_reduce_jit)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "tile_n", "interpret"))
+def _multi_scan_vertical_reduce_jit(
+    data_cm: jax.Array,
+    dim_ids: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    spec,
+    tile_n: int = _rs.DEFAULT_TILE_N,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = default_interpret()
+    if use_xla():
+        mask = _ref.multi_scan_vertical_ref(data_cm, dim_ids, lower, upper)
+    else:
+        mask = _ms.multi_scan_vertical(data_cm, dim_ids, lower, upper,
+                                       tile_n=tile_n, interpret=interpret)
+    return spec.device_reduce(mask, data_cm, tile_n=tile_n,
+                              interpret=interpret)
+
+
+multi_scan_vertical_reduce = _counted(
+    "multi_scan_vertical_reduce",
+    "Batched partial-match scan + ResultSpec reducer in one launch.",
+)(_multi_scan_vertical_reduce_jit)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "tile_n", "n_queries", "interpret"))
+def _multi_visit_reduce_jit(
+    data_cm: jax.Array,
+    query_ids: jax.Array,
+    block_ids: jax.Array,
+    valid: jax.Array,
+    visit_index: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    *,
+    spec,
+    tile_n: int = _rs.DEFAULT_TILE_N,
+    n_queries: int = 1,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = default_interpret()
+    if use_xla():
+        m_pad, n_pad = data_cm.shape
+        blocks = data_cm.reshape(m_pad, n_pad // tile_n, tile_n).transpose(1, 0, 2)
+        masks = _ref.multi_scan_blocks_ref(blocks, query_ids, block_ids,
+                                           lower, upper)
+    else:
+        masks = _ms.multi_scan_visit(data_cm, query_ids, block_ids, lower,
+                                     upper, tile_n=tile_n, interpret=interpret)
+    return spec.reduce_visits(masks, data_cm, query_ids, block_ids, valid,
+                              visit_index, tile_n=tile_n,
+                              n_queries=n_queries, interpret=interpret)
+
+
+multi_visit_reduce = _counted(
+    "multi_visit_reduce",
+    "Batched two-phase refinement over a (query, block) visit list + the "
+    "ResultSpec's on-device visit reducer in one launch (shared by the tree "
+    "MDIS and the VA-file phase 2).",
+)(_multi_visit_reduce_jit)
+
+
 @jax.jit
 def _mask_counts_jit(mask: jax.Array) -> jax.Array:
     return jnp.sum(mask != 0, axis=-1).astype(jnp.int32)
@@ -406,24 +517,6 @@ def mask_counts(mask: jax.Array) -> jax.Array:
     device: the result crossing to host is O(Q) ints, never an id array.
     """
     return _mask_counts_jit(mask)
-
-
-@functools.partial(jax.jit, static_argnames=("n_queries",))
-def _visit_counts_jit(masks: jax.Array, query_ids: jax.Array,
-                      valid: jax.Array, n_queries: int) -> jax.Array:
-    per_visit = jnp.sum(masks != 0, axis=-1).astype(jnp.int32) * valid
-    return jnp.zeros((n_queries,), jnp.int32).at[query_ids].add(per_visit)
-
-
-def visit_counts(masks: jax.Array, query_ids: jax.Array, valid: jax.Array,
-                 n_queries: int) -> jax.Array:
-    """Reduce (V, tile_n) visit masks to per-query match counts on device.
-
-    ``valid`` zeroes padding visits (block id < 0) so their clamped block-0
-    scans never count; duplicates cannot occur (each (query, block) pair is
-    visited at most once).
-    """
-    return _visit_counts_jit(masks, query_ids, valid, n_queries)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

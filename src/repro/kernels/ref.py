@@ -157,6 +157,38 @@ def kv_visit_attention_ref(
     return out.astype(q.dtype)
 
 
+def masked_fill_ref(masks: jax.Array, values: jax.Array, fill) -> jax.Array:
+    """Oracle for the batched masked fill (the top-k front half).
+
+    Args:
+      masks: (Q, n) int8 match masks.
+      values: (n,) attribute values (one dataset row).
+      fill: reduction identity for non-matching lanes.
+
+    Returns:
+      (Q, n) float32 — value where the mask is set, ``fill`` elsewhere.
+    """
+    return jnp.where(masks != 0, values[None, :].astype(jnp.float32),
+                     jnp.float32(fill))
+
+
+def masked_agg_ref(masks: jax.Array, values: jax.Array, op: str) -> jax.Array:
+    """Oracle for the batched masked aggregate.
+
+    Args:
+      masks: (Q, n) int8 match masks.
+      values: (n,) attribute values.
+      op: "sum" | "min" | "max".
+
+    Returns:
+      (Q,) float32 aggregates (reduction identity where nothing matches).
+    """
+    from repro.kernels.reducers import AGG_FILL
+    filled = masked_fill_ref(masks, values, AGG_FILL[op])
+    red = {"sum": jnp.sum, "min": jnp.min, "max": jnp.max}[op]
+    return red(filled, axis=-1)
+
+
 def va_filter_ref(codes: jax.Array, cell_lo: jax.Array, cell_hi: jax.Array) -> jax.Array:
     """Oracle for the VA-file approximation filter on *unpacked* codes.
 

@@ -18,31 +18,42 @@ real deployment would run. Throughput (queries/sec — the primary metric of the
 literature, e.g. "Learning Multi-dimensional Indexes") accumulates in
 ``ServerStats``.
 
-``mode="count"`` serves COUNT(*)-style analytics: tickets resolve to int
-match counts reduced on device, never paying the per-query host-side
-``nonzero`` that dominates large result sets.
+The server is typed by a ``types.ResultSpec``: tickets resolve to whatever
+the spec's host finalizer produces — sorted id arrays (``Ids()``, default),
+int counts (``Count()``), bool masks, top-k id arrays, or float aggregates —
+with the reduction running on device so reduced shapes never pay the
+per-query host-side ``nonzero`` that dominates large result sets.
+``ServerStats`` buckets served queries by spec kind. The legacy
+``mode="ids"|"count"`` strings keep working with a DeprecationWarning.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional, Union
+from typing import Any, Optional, Union
 
 import numpy as np
 
 from repro.core import MDRQEngine, RangeQuery
-from repro.core.types import validate_mode
+from repro.core.types import ResultSpec, resolve_spec
 
 
 @dataclasses.dataclass
 class Ticket:
-    """Handle for one submitted query; ``result()`` blocks (flushes) if needed."""
+    """Handle for one submitted query; ``result()`` blocks (flushes) if needed.
+
+    ``spec`` records the result shape this ticket resolves to: ``result()``
+    returns sorted ids under ``Ids()``, an int under ``Count()``, an (n,)
+    bool mask under ``Mask()``, value-ordered top-k ids under ``TopK``, and
+    a float under ``Agg`` (NaN for an empty match set on min/max).
+    """
 
     _server: "MDRQServer"
-    _result: Optional[Union[np.ndarray, int]] = None
+    spec: Optional[ResultSpec] = None
+    _result: Any = None
     _done: bool = False
 
-    def result(self) -> Union[np.ndarray, int]:
+    def result(self) -> Union[np.ndarray, int, float]:
         if not self._done:
             self._server.flush()
         assert self._done, "flush did not resolve this ticket"
@@ -62,6 +73,8 @@ class ServerStats:
     n_results: int = 0
     # access-path buckets summed over every flushed batch
     method_counts: dict[str, int] = dataclasses.field(default_factory=dict)
+    # served queries bucketed by result-spec kind ("ids", "count", "topk", ...)
+    spec_counts: dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def qps(self) -> float:
@@ -81,16 +94,16 @@ class MDRQServer:
         max_batch: int = 128,
         max_wait_s: float = 2e-3,
         method: str = "auto",
-        mode: str = "ids",
+        spec: Optional[ResultSpec] = None,
+        mode: Optional[str] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
-        validate_mode(mode)
         self.engine = engine
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.method = method
-        self.mode = mode
+        self.spec = resolve_spec(spec, mode).validate(engine.dataset.m)
         self.stats = ServerStats()
         self._pending: list[tuple[RangeQuery, Ticket]] = []
         self._oldest_t: float = 0.0
@@ -106,7 +119,7 @@ class MDRQServer:
             # batch they would fail every co-batched query's flush
             raise ValueError(
                 f"query dims {q.m} != dataset dims {self.engine.dataset.m}")
-        ticket = Ticket(self)
+        ticket = Ticket(self, spec=self.spec)
         if not self._pending:
             self._oldest_t = time.perf_counter()
         self._pending.append((q, ticket))
@@ -139,7 +152,7 @@ class MDRQServer:
         t0 = time.perf_counter()
         try:
             results = self.engine.query_batch(queries, method=self.method,
-                                              mode=self.mode)
+                                              spec=self.spec)
         except Exception:
             # don't lose co-batched queries: put them back (in order) so
             # their tickets remain resolvable after the caller handles the
@@ -151,6 +164,9 @@ class MDRQServer:
             ticket._result = res
             ticket._done = True
         self.stats.n_queries += len(pending)
+        kind = self.spec.kind
+        self.stats.spec_counts[kind] = \
+            self.stats.spec_counts.get(kind, 0) + len(pending)
         self.stats.n_batches += 1
         self.stats.busy_seconds += dt
         self.stats.plan_seconds += self.engine.last_batch_stats.plan_seconds

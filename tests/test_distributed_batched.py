@@ -20,8 +20,8 @@ from pathlib import Path
 import numpy as np
 import pytest
 
-from repro.core import (Dataset, DistributedScan, MDRQEngine, QueryBatch,
-                        RangeQuery, match_ids_np)
+from repro.core import (Count, Dataset, DistributedScan, MDRQEngine,
+                        QueryBatch, RangeQuery, match_ids_np)
 from repro.core.distributed import make_data_mesh
 from repro.core.scan import build_columnar_scan
 from repro.kernels import ops
@@ -56,14 +56,14 @@ def test_distributed_batch_matches_columnar(dist_pair, uni5):
 
     ops.reset_counters()
     got = dsc.query_batch(batch)
-    assert ops.counter("distributed_multi_mask") == 1
+    assert ops.counter("distributed_multi_reduce") == 1
     assert ops.counter("host_sync") == 1
     for a, b in zip(got, want):
         np.testing.assert_array_equal(a, b)
 
     ops.reset_counters()
-    counts = dsc.query_batch(batch, mode="count")
-    assert ops.counter("distributed_multi_counts") == 1
+    counts = dsc.query_batch(batch, spec=Count())
+    assert ops.counter("distributed_multi_reduce") == 1
     assert ops.counter("host_sync") == 1
     assert counts == [w.size for w in want]
     assert all(isinstance(c, int) for c in counts)
@@ -77,7 +77,7 @@ def test_distributed_batch_accepts_query_list(dist_pair, uni5):
     for q, ids in zip(queries, got):
         np.testing.assert_array_equal(ids, match_ids_np(uni5.cols, q))
     with pytest.raises(ValueError):
-        dsc.query_batch(queries, mode="top_k")
+        dsc.query_batch(queries, spec="top_k")
 
 
 def test_distributed_single_query_is_counted(dist_pair, uni5):
@@ -110,12 +110,12 @@ def test_meshed_engine_routes_scan_buckets(uni5):
     queries = _mixed_queries(uni5, rng, 4)
     ops.reset_counters()
     got = eng_d.query_batch(queries, method="scan")
-    assert ops.counter("distributed_multi_mask") == 1
-    assert ops.counter("multi_range_scan") == 0  # not the single-device path
+    assert ops.counter("distributed_multi_reduce") == 1
+    assert ops.counter("multi_scan_reduce") == 0  # not the single-device path
     for a, b in zip(got, eng_s.query_batch(queries, method="scan")):
         np.testing.assert_array_equal(a, b)
 
-    counts = eng_d.query_batch(queries, method="scan", mode="count")
+    counts = eng_d.query_batch(queries, method="scan", spec=Count())
     assert counts == [match_ids_np(uni5.cols, q).size for q in queries]
     # single-query dispatch routes through the mesh as well
     q = queries[0]
@@ -158,12 +158,12 @@ def test_server_unchanged_on_meshed_engine(uni5):
     ops.reset_counters()
     results = server.serve_all(queries)
     # 9 queries at window 4 -> 3 flushes -> 3 fused collective launches
-    assert ops.counter("distributed_multi_mask") == server.stats.n_batches == 3
+    assert ops.counter("distributed_multi_reduce") == server.stats.n_batches == 3
     for q, ids in zip(queries, results):
         np.testing.assert_array_equal(ids, match_ids_np(uni5.cols, q))
 
     counts = MDRQServer(eng, max_batch=8, max_wait_s=float("inf"),
-                        method="scan", mode="count").serve_all(queries)
+                        method="scan", spec=Count()).serve_all(queries)
     assert counts == [match_ids_np(uni5.cols, q).size for q in queries]
 
 
@@ -173,8 +173,8 @@ DIST_BATCH_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np, jax
-    from repro.core import (Dataset, DistributedScan, MDRQEngine, QueryBatch,
-                            RangeQuery, match_ids_np)
+    from repro.core import (Agg, Count, Dataset, DistributedScan, MDRQEngine,
+                            QueryBatch, RangeQuery, TopK, match_ids_np)
     from repro.core.distributed import make_data_mesh
     from repro.core.scan import build_columnar_scan
     from repro.kernels import ops
@@ -191,15 +191,36 @@ DIST_BATCH_SCRIPT = textwrap.dedent("""
         want = cs.query_batch(batch)
         ops.reset_counters()
         got = dsc.query_batch(batch)
-        assert ops.counter("distributed_multi_mask") == 1, ops.counters()
+        assert ops.counter("distributed_multi_reduce") == 1, ops.counters()
         assert ops.counter("host_sync") == 1, ops.counters()
         for k, (a, b) in enumerate(zip(got, want)):
             assert np.array_equal(a, b), k
         ops.reset_counters()
-        counts = dsc.query_batch(batch, mode="count")
-        assert ops.counter("distributed_multi_counts") == 1, ops.counters()
+        counts = dsc.query_batch(batch, spec=Count())
+        assert ops.counter("distributed_multi_reduce") == 1, ops.counters()
         assert ops.counter("host_sync") == 1, ops.counters()
         assert counts == [w.size for w in want]
+        # reduced shapes: shard-local partials + one small collective merge,
+        # still one launch + one host sync, oracle-checked against the ids
+        for spec in (TopK(k=5, dim=1), Agg("sum", 0), Agg("min", 2)):
+            ops.reset_counters()
+            red = dsc.query_batch(batch, spec=spec)
+            assert ops.counter("distributed_multi_reduce") == 1, ops.counters()
+            assert ops.counter("host_sync") == 1, ops.counters()
+            for k, ids in enumerate(want):
+                vals = ds.cols[spec.dim, ids]
+                if spec.kind == "topk":
+                    assert set(red[k]) <= set(ids)
+                    exp = ids[np.argsort(-vals, kind="stable")[: spec.k]]
+                    assert np.allclose(ds.cols[spec.dim, red[k]],
+                                       ds.cols[spec.dim, exp]), k
+                elif spec.op == "sum":
+                    assert np.isclose(red[k], vals.sum(dtype=np.float64),
+                                      rtol=1e-4), k
+                elif ids.size:
+                    assert np.isclose(red[k], vals.min()), k
+                else:
+                    assert np.isnan(red[k]), k
         return want
 
     # random 5-dim dataset, record-anchored + partial + match-all queries

@@ -131,7 +131,7 @@ def test_finite_bounds_respect_device_dtype(dtype):
     """Match-all bounds must stay finite *in the comparison dtype*: float32
     extrema round to +-inf under a bfloat16 cast, so the +inf object-padding
     sentinels would match and every padded-axis count reduction (mask_counts,
-    visit_counts, distributed psum) would overcount."""
+    visit segment counts, distributed psum) would overcount."""
     inf = np.full((8, 1), np.inf, np.float32)
     lo, up = T.finite_query_bounds(-inf, inf, dtype=dtype)
     assert np.isfinite(np.asarray(jnp.asarray(lo, dtype), np.float32)).all()

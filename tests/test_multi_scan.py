@@ -8,7 +8,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (Dataset, MDRQEngine, QueryBatch, RangeQuery,
+from repro.core import (Count, Dataset, MDRQEngine, QueryBatch, RangeQuery,
                         match_ids_np, match_mask_np)
 from repro.core.planner import CostModel, Planner, Histograms
 from repro.core.vafile import build_vafile
@@ -140,9 +140,9 @@ def _queries_with_points(cols, rng, n_q):
 
 def test_vafile_batch_one_launch_one_sync(uni5):
     """Tentpole budget: the batched VA path issues exactly one phase-1 launch
-    and one phase-1 host sync per batch (plus one fused visit launch + mask
-    readback), never the per-query va_filter — results bit-identical to the
-    single-query path."""
+    and one phase-1 host sync per batch (plus one fused visit-reduce launch +
+    payload readback), never the per-query va_filter — results bit-identical
+    to the single-query path."""
     vf = build_vafile(uni5, tile_n=512)
     rng = np.random.default_rng(17)
     queries = _queries_with_points(uni5.cols, rng, 6)
@@ -153,13 +153,13 @@ def test_vafile_batch_one_launch_one_sync(uni5):
     batched = vf.query_batch(batch)
     assert ops.counter("multi_va_filter") == 1   # one phase-1 launch
     assert ops.counter("va_filter") == 0         # never per-query
-    assert ops.counter("multi_range_scan_visit") == 1
+    assert ops.counter("multi_visit_reduce") == 1
     assert ops.counter("host_sync") == 2         # survivor bits + visit masks
     for s, b in zip(singles, batched):
         np.testing.assert_array_equal(s, b)
 
     ops.reset_counters()
-    counts = vf.query_batch(batch, mode="count")
+    counts = vf.query_batch(batch, spec=Count())
     assert ops.counter("multi_va_filter") == 1
     assert ops.counter("host_sync") == 2
     assert counts == [s.size for s in singles]
@@ -177,7 +177,7 @@ def test_vafile_batch_gmrqb_templates():
     queries = [gmrqb.template(k, rng, ds) for k in (1, 4, 5, 7, 8)]
     batch = QueryBatch.from_queries(queries)
     batched = vf.query_batch(batch)
-    counts = vf.query_batch(batch, mode="count")
+    counts = vf.query_batch(batch, spec=Count())
     for k, q in enumerate(queries):
         oracle = match_ids_np(ds.cols, q)
         np.testing.assert_array_equal(batched[k], oracle)
@@ -231,8 +231,8 @@ def test_count_mode_scan_single_launch_no_mask_readback(eng_all, uni5):
     rng = np.random.default_rng(31)
     queries = _mixed_queries(uni5.m, uni5.cols, rng, 8)
     ops.reset_counters()
-    eng_all.query_batch(queries, method="scan", mode="count")
-    assert ops.counter("multi_range_scan") == 1
+    eng_all.query_batch(queries, method="scan", spec=Count())
+    assert ops.counter("multi_scan_reduce") == 1
     assert ops.counter("host_sync") == 1
 
 

@@ -193,8 +193,8 @@ def test_auto_batch_launch_budget_one_per_bucket(uni5):
     ops.reset_counters()
     eng.query_batch(queries, method="auto")
     n_buckets = len(eng.last_batch_stats.method_counts)
-    launches = (ops.counter("multi_range_scan")
-                + ops.counter("multi_range_scan_vertical"))
+    launches = (ops.counter("multi_scan_reduce")
+                + ops.counter("multi_scan_vertical_reduce"))
     assert launches == n_buckets
     assert ops.counter("host_sync") == n_buckets
 
@@ -230,7 +230,16 @@ def test_plan_batch_fixpoint_uses_realized_buckets(uni5):
     128), but its *realized* tree bucket would hold one query — the fixpoint
     re-prices with that bucket and moves it onto the big scan bucket, whose
     amortization is real. The final plan differs from what ``len(batch)``
-    amortization (and from what batch_size=1) would choose."""
+    amortization (and from what batch_size=1) would choose.
+
+    Planned under ``Count()`` so the result-payload term is negligible and
+    the scenario isolates the amortization effect (under ``Ids()`` the
+    scan's n-byte mask readback dominates at n=10M and the tree keeps the
+    selective query on output-bytes grounds — that spec-dependent flip is
+    covered by test_result_specs.py).
+    """
+    from repro.core import Count
+
     hist = Histograms.build(uni5)
     p = Planner(hist, CostModel(n=10_000_000, m=5),
                 available=("scan", "kdtree"))
@@ -239,11 +248,12 @@ def test_plan_batch_fixpoint_uses_realized_buckets(uni5):
     batch = QueryBatch.from_queries([wide] * 127 + [selective])
 
     # whole-batch amortization (the seed's explain_batch semantics): tree
-    assert p.explain(selective, batch_size=len(batch)).method == "kdtree"
-    assert p.explain_batch(batch.queries)[-1].method == "kdtree"
+    assert p.explain(selective, batch_size=len(batch),
+                     spec=Count()).method == "kdtree"
+    assert p.explain_batch(batch.queries, spec=Count())[-1].method == "kdtree"
     # realized-bucket fixpoint: the one-query tree bucket can't pay its own
     # host-sync tax, the 128-query scan bucket amortizes for free -> scan
-    bp = p.plan_batch(batch)
+    bp = p.plan_batch(batch, spec=Count())
     assert isinstance(bp, BatchPlan)
     assert bp.methods[-1] == "scan"
     assert bp.bucket_sizes == {"scan": 128}
