@@ -2,7 +2,7 @@
 PYTHONPATH := src
 
 .PHONY: test test-dist smoke lint bench-throughput bench-count bench-specs \
-        bench-specs-smoke bench-dist bench
+        bench-specs-smoke bench-smoke bench-dist bench
 
 # Tier-1 verify: the full test suite, fail-fast.
 test:
@@ -40,6 +40,14 @@ bench-specs:
 bench-specs-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_throughput --spec topk --smoke
 	PYTHONPATH=src python -m benchmarks.bench_throughput --spec agg --smoke
+
+# CI smoke artifact: per-batch-size qps + latency percentiles as JSON.
+# CI runs this into /tmp and diffs against the checked-in BENCH_smoke.json
+# (benchmarks.check_bench, +-30% qps guard band, warn-only).
+BENCH_SMOKE_OUT ?= BENCH_smoke.json
+bench-smoke:
+	PYTHONPATH=src python -m benchmarks.bench_throughput --smoke \
+	--json $(BENCH_SMOKE_OUT)
 
 # Cross-device batched scan sweep on the 8-device CPU proxy.
 bench-dist:

@@ -27,7 +27,7 @@ if __name__ == "__main__":  # direct module run: set the backend before any
 
 import numpy as np
 
-from benchmarks.common import emit_row
+from benchmarks.common import emit_row, write_bench_json
 from repro.core import Agg, Count, Ids, Mask, MDRQEngine, TopK
 from repro.data import gmrqb
 from repro.serve.mdrq_server import MDRQServer
@@ -150,6 +150,47 @@ def run_specs(quick: bool = True, smoke: bool = False,
                  result_spec=kind)
 
 
+def run_smoke(json_path: str = "BENCH_smoke.json", spec=Ids()) -> None:
+    """The CI smoke artifact: per-batch-size qps + p50/p95/p99 queue and
+    execute latency over the mixed workload at CI-sized inputs, written to
+    ``json_path`` (``make bench-smoke`` -> ``BENCH_smoke.json``).
+
+    ``benchmarks.check_bench`` diffs a fresh run of this against the
+    checked-in baseline with a +-30% qps guard band (warn-only), so a
+    serving-path throughput regression surfaces in CI logs without making a
+    noisy shared runner fail the build.
+    """
+    eng, mixed, n_queries = _workload(quick=True, smoke=True)
+    kind = spec.kind
+    batches = []
+    for b in BATCH_SIZES:
+        server = MDRQServer(eng, max_batch=b, max_wait_s=float("inf"),
+                            method="auto", spec=spec)
+        server.serve_all(mixed[: 2 * b])  # warmup (jit + retrace buckets)
+        server.stats = type(server.stats)()
+        server.serve_all(mixed)
+        stats = server.stats
+        lat = stats.latency_percentiles(kind)
+        emit_row(f"smoke/B{b}", 1e6 / stats.qps,
+                 f"qps={stats.qps:.1f};"
+                 f"p50_exec_us={1e6 * lat['execute'].get('p50', 0):.1f};"
+                 f"p99_exec_us={1e6 * lat['execute'].get('p99', 0):.1f}",
+                 result_spec=kind)
+        batches.append({
+            "batch": b,
+            "qps": round(stats.qps, 2),
+            "mean_batch_size": round(stats.mean_batch_size, 2),
+            "plan_us_per_q": round(_plan_us(stats), 2),
+            "method_counts": stats.method_counts,
+            "flush_reasons": stats.flush_reasons,
+            "latency_seconds": lat,
+        })
+    write_bench_json(
+        json_path, "smoke",
+        backend=os.environ.get("REPRO_KERNEL_BACKEND", "auto"),
+        n=eng.dataset.n, n_queries=n_queries, spec=kind, batches=batches)
+
+
 def run_devices(quick: bool = True) -> None:
     """Cross-device batched-scan sweep (``--devices`` / ``make bench-dist``).
 
@@ -201,6 +242,9 @@ if __name__ == "__main__":
     ap.add_argument("--devices", action="store_true",
                     help="cross-device batched scan sweep (forces an "
                          "8-device CPU platform when XLA_FLAGS is unset)")
+    ap.add_argument("--json", default="",
+                    help="with --spec ids --smoke: write the per-batch-size "
+                         "qps/latency artifact here (BENCH_smoke.json)")
     args = ap.parse_args()
     from benchmarks.common import CSV_HEADER
     print(CSV_HEADER, flush=True)
@@ -210,5 +254,7 @@ if __name__ == "__main__":
         run_count(quick=not args.full)
     elif args.spec in ("topk", "agg", "mask"):
         run_specs(quick=not args.full, smoke=args.smoke, kinds=(args.spec,))
+    elif args.smoke:
+        run_smoke(json_path=args.json or "BENCH_smoke.json")
     else:
         run(quick=not args.full)

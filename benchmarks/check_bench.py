@@ -1,0 +1,73 @@
+"""Diff a fresh BENCH_smoke.json against the checked-in baseline.
+
+CI regression guard for the serving path: ``make bench-smoke`` writes a fresh
+artifact, and this script compares its per-batch-size qps to the baseline
+with a guard band (default +-30%). Outside the band it *warns* — shared CI
+runners are too noisy for a hard throughput gate — and exits 0; ``--strict``
+turns the warnings into a non-zero exit for dedicated perf machines.
+
+  PYTHONPATH=src python -m benchmarks.check_bench /tmp/BENCH_smoke.json \
+      BENCH_smoke.json [--band 0.30] [--strict]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _by_batch(doc: dict) -> dict[int, dict]:
+    return {int(b["batch"]): b for b in doc.get("batches", [])}
+
+
+def compare(fresh: dict, baseline: dict, band: float) -> list[str]:
+    """Human-readable comparison lines; entries breaching the band are
+    prefixed with WARN."""
+    out = []
+    fb, bb = _by_batch(fresh), _by_batch(baseline)
+    for batch in sorted(bb):
+        base = bb[batch]["qps"]
+        if batch not in fb:
+            out.append(f"WARN B{batch}: missing from fresh run "
+                       f"(baseline qps={base:.1f})")
+            continue
+        cur = fb[batch]["qps"]
+        ratio = cur / base if base > 0 else float("inf")
+        line = (f"B{batch}: qps {cur:.1f} vs baseline {base:.1f} "
+                f"(x{ratio:.2f}, band x{1 - band:.2f}..x{1 + band:.2f})")
+        if not (1.0 - band) <= ratio <= (1.0 + band):
+            line = "WARN " + line
+        out.append(line)
+    for batch in sorted(set(fb) - set(bb)):
+        out.append(f"B{batch}: new (qps={fb[batch]['qps']:.1f}, no baseline)")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="just-produced BENCH_smoke.json")
+    ap.add_argument("baseline", help="checked-in BENCH_smoke.json")
+    ap.add_argument("--band", type=float, default=0.30,
+                    help="relative qps guard band (0.30 = +-30%%)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on any WARN (perf-dedicated runners)")
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    lines = compare(fresh, baseline, args.band)
+    warned = False
+    for line in lines:
+        warned = warned or line.startswith("WARN")
+        print(line, flush=True)
+    if warned:
+        print("check_bench: qps outside the guard band (warn-only; "
+              "rerun or refresh the baseline via `make bench-smoke`)"
+              if not args.strict else
+              "check_bench: FAILED (--strict)", flush=True)
+    return 1 if (warned and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

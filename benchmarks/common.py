@@ -7,8 +7,9 @@ is the honest CPU throughput proxy. On a TPU the same harness times Mosaic.
 """
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -44,6 +45,29 @@ def qps(engine, queries, method: str, n_warm: int = 3) -> float:
 
 CSV_HEADER = "name,us_per_call,result_spec,derived"
 
+# Every emit_row also lands here as a dict, so any bench section can be
+# serialized to a BENCH_<name>.json artifact after the fact (run.py
+# --json-dir; bench_throughput --json). Cleared only by mark()/rows_since
+# bookkeeping — a process runs few enough rows that the list is free.
+ROWS: list[dict] = []
+
+
+def _parse_derived(derived: str) -> dict:
+    """The ``derived`` blob's ``k=v`` pairs as a dict (numbers parsed, a
+    trailing x/% unit stripped), so JSON artifacts carry qps etc. as fields
+    machines can diff instead of strings they must re-parse."""
+    out = {}
+    for part in filter(None, derived.split(";")):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        num = v[:-1] if v and v[-1] in "x%" else v
+        try:
+            out[k] = float(num)
+        except ValueError:
+            out[k] = v
+    return out
+
 
 def emit_row(name: str, us: float, derived: str = "",
              result_spec: str = "ids") -> None:
@@ -52,3 +76,28 @@ def emit_row(name: str, us: float, derived: str = "",
     column so throughput tables distinguish ids/count/top-k runs instead of
     overloading the name or the derived blob."""
     print(f"{name},{us:.2f},{result_spec},{derived}", flush=True)
+    ROWS.append({"name": name, "us_per_call": round(us, 2),
+                 "result_spec": result_spec, "derived": derived,
+                 **_parse_derived(derived)})
+
+
+def mark() -> int:
+    """Bookmark the row stream (pair with ``rows_since``)."""
+    return len(ROWS)
+
+
+def rows_since(start: int) -> list[dict]:
+    return ROWS[start:]
+
+
+def write_bench_json(path: str, bench: str, rows: Optional[list] = None,
+                     **extra) -> None:
+    """Write one ``BENCH_<name>.json`` artifact: the rows of a bench section
+    plus whatever structured payload the bench adds (``extra``), e.g. the
+    smoke bench's per-batch-size qps/latency entries that
+    ``benchmarks.check_bench`` diffs against the checked-in baseline."""
+    doc = {"bench": bench, "rows": ROWS if rows is None else rows, **extra}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)

@@ -15,6 +15,7 @@ import sys
 import time
 import traceback
 
+from benchmarks import common
 from benchmarks.common import CSV_HEADER
 
 # (section name, module[, entry point — defaults to ``run``])
@@ -44,8 +45,15 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default="", help="comma-separated section names")
+    ap.add_argument("--json-dir", default="",
+                    help="also write one BENCH_<section>.json per section "
+                         "(its CSV rows as structured records) into this "
+                         "directory")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
+    if args.json_dir:
+        import os as _os
+        _os.makedirs(args.json_dir, exist_ok=True)
 
     print(CSV_HEADER, flush=True)
     failures = 0
@@ -53,6 +61,7 @@ def main() -> int:
         if only and name not in only:
             continue
         t0 = time.time()
+        start = common.mark()
         try:
             import importlib
             mod = importlib.import_module(module)
@@ -62,6 +71,11 @@ def main() -> int:
             failures += 1
             print(f"# section {name} FAILED", flush=True)
             traceback.print_exc()
+            continue
+        if args.json_dir:
+            common.write_bench_json(
+                f"{args.json_dir}/BENCH_{name}.json", name,
+                rows=common.rows_since(start), full=args.full)
     return 1 if failures else 0
 
 

@@ -37,6 +37,8 @@ from typing import Optional, Sequence, Union
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from repro.core import types as T
 from repro.core import scan as scan_mod
 from repro.core import paths as paths_mod
@@ -75,6 +77,10 @@ class BatchStats:
     method_counts: dict[str, int]
     n_results: int
     plan_seconds: float = 0.0
+    # per-query chosen path, positionally aligned with the input batch — the
+    # server's query log records how each query was served without paying for
+    # full tracing
+    methods: Optional[list[str]] = None
 
     @property
     def qps(self) -> float:
@@ -156,6 +162,7 @@ class MDRQEngine:
         )
         self.last_stats: Optional[QueryStats] = None
         self.last_batch_stats: Optional[BatchStats] = None
+        self.last_trace: Optional[obs_tracing.BatchTrace] = None
 
     @property
     def columnar(self) -> scan_mod.ColumnarScan:
@@ -253,6 +260,7 @@ class MDRQEngine:
         method: str = "auto",
         spec: Optional[T.ResultSpec] = None,
         mode: Optional[str] = None,
+        trace: bool = False,
     ) -> list:
         """Execute a batch of queries under a ResultSpec -> per-query typed
         results (sorted id arrays by default).
@@ -265,6 +273,13 @@ class MDRQEngine:
         and identical to per-query ``query`` calls; aggregate ``BatchStats``
         land in ``last_batch_stats`` with the planning share in
         ``plan_seconds``.
+
+        ``trace=True`` installs an ``obs.Tracer`` for the duration and leaves
+        a ``BatchTrace`` in ``last_trace``: one ``QueryTrace`` per query
+        (chosen path, bucket, estimated vs realized selectivity and cost,
+        amortized launches/host-syncs) plus the span tree. With
+        ``trace=False`` the span calls short-circuit to ``obs.NULL_SPAN`` —
+        nothing is allocated on the hot path.
         """
         spec = T.resolve_spec(spec, mode)
         if isinstance(queries, T.QueryBatch):
@@ -273,36 +288,106 @@ class MDRQEngine:
             queries = list(queries)
             batch = T.QueryBatch.from_queries(queries) if queries else None
         if batch is None or len(batch) == 0:
-            self.last_batch_stats = BatchStats(0, 0.0, {}, 0)
+            self.last_batch_stats = BatchStats(0, 0.0, {}, 0, methods=[])
             return []
         if batch.m != self.dataset.m:
             raise ValueError(f"batch dims {batch.m} != dataset dims {self.dataset.m}")
         spec.validate(self.dataset.m)
-        t0 = time.perf_counter()
-        if method == "auto":
-            methods = self.planner.plan_batch(batch, spec=spec).methods
-        else:
-            self._path(method)  # raises on unknown names before any work
-            methods = [method] * len(batch)
-        plan_dt = time.perf_counter() - t0
 
-        buckets: dict[str, list[int]] = {}
-        for k, meth in enumerate(methods):
-            buckets.setdefault(meth, []).append(k)
+        tracer = obs_tracing.Tracer() if trace else None
+        if tracer is not None:
+            tracer.__enter__()
+        bp = None
+        try:
+            t0 = time.perf_counter()
+            with obs_tracing.span("plan", n_queries=len(batch)):
+                if method == "auto":
+                    bp = self.planner.plan_batch(batch, spec=spec)
+                    methods = bp.methods
+                else:
+                    self._path(method)  # raises on unknown names before work
+                    methods = [method] * len(batch)
+            plan_dt = time.perf_counter() - t0
 
-        results: list = [None] * len(batch)
+            buckets: dict[str, list[int]] = {}
+            for k, meth in enumerate(methods):
+                buckets.setdefault(meth, []).append(k)
+
+            results: list = [None] * len(batch)
+            for meth, idxs in buckets.items():
+                sub = T.QueryBatch(batch.lower[idxs], batch.upper[idxs])
+                with obs_tracing.span("execute", path=meth,
+                                      bucket=len(idxs)) as sp:
+                    out = self._path_query_batch(self._path(meth), sub, spec)
+                    sp.block_on(out)
+                for k, res in zip(idxs, out):
+                    results[k] = res
+            dt = time.perf_counter() - t0
+        finally:
+            if tracer is not None:
+                tracer.__exit__(None, None, None)
+
+        reg = obs_metrics.registry()
+        reg.counter("mdrq_query_batches_total",
+                    help="query_batch executions").inc()
         for meth, idxs in buckets.items():
-            sub = T.QueryBatch(batch.lower[idxs], batch.upper[idxs])
-            for k, res in zip(idxs,
-                              self._path_query_batch(self._path(meth), sub,
-                                                     spec)):
-                results[k] = res
-        dt = time.perf_counter() - t0
+            reg.counter("mdrq_queries_total",
+                        help="queries served, by access path",
+                        path=meth).inc(len(idxs))
+
         self.last_batch_stats = BatchStats(
             n_queries=len(batch),
             seconds=dt,
             method_counts={m: len(ix) for m, ix in buckets.items()},
             n_results=_n_results(spec, results),
             plan_seconds=plan_dt,
+            methods=list(methods),
         )
+        if tracer is not None:
+            self.last_trace = self._build_trace(
+                tracer, batch, spec, bp, methods, buckets, results,
+                plan_dt, dt)
         return results
+
+    def _build_trace(self, tracer, batch, spec, bp, methods, buckets,
+                     results, plan_dt, dt) -> obs_tracing.BatchTrace:
+        """Assemble per-query ``QueryTrace`` records from the span tree and
+        the batch plan (estimates come from ``bp`` when the planner chose;
+        explicit-method runs get histogram selectivities and NaN cost)."""
+        n = self.dataset.n
+        mq = batch.dims_mask.sum(axis=1)
+        if bp is not None:
+            sels = bp.est_selectivity
+            path_row = {name: j for j, name in enumerate(bp.path_names)}
+        else:
+            sels = self.planner.plan_inputs(batch).sels
+            path_row = {}
+        # one execute span per bucket, keyed by its path attr
+        bucket_spans = {s.attrs.get("path"): s for s in tracer.find("execute")}
+        records = []
+        for k, meth in enumerate(methods):
+            bsize = len(buckets[meth])
+            sp = bucket_spans.get(meth)
+            res_size = spec.result_size(results[k])
+            obs_sel = (res_size / n if spec.kind in ("ids", "count", "mask")
+                       else None)
+            est_cost = (float(bp.costs[path_row[meth], k]) if bp is not None
+                        else float("nan"))
+            records.append(obs_tracing.QueryTrace(
+                index=k,
+                method=meth,
+                bucket_size=bsize,
+                est_selectivity=float(sels[k]),
+                est_cost=est_cost,
+                spec_kind=spec.kind,
+                mq=int(mq[k]),
+                result_size=res_size,
+                obs_selectivity=obs_sel,
+                seconds=(sp.seconds / bsize if sp is not None else 0.0),
+                launches=(sp.launches / bsize if sp is not None else 0.0),
+                host_syncs=(sp.host_syncs / bsize if sp is not None else 0.0),
+            ))
+        return obs_tracing.BatchTrace(
+            n=n, n_queries=len(batch), spec_kind=spec.kind,
+            plan_seconds=plan_dt, seconds=dt, queries=records,
+            spans=tracer.spans)

@@ -37,7 +37,21 @@ from typing import Any, Callable, Protocol, Union, runtime_checkable
 
 import numpy as np
 
+from repro.obs import tracing as obs_tracing
 from repro.core import types as T
+
+
+def _path_span(path, batch, spec):
+    """Span around one adapter batch execution.
+
+    Returns the shared ``NULL_SPAN`` singleton unless a tracer is active —
+    the ``enabled()`` guard also skips building the attrs dict, so the
+    disabled hot path allocates nothing.
+    """
+    if not obs_tracing.enabled():
+        return obs_tracing.NULL_SPAN
+    return obs_tracing.span("path", path=path.name, n_queries=len(batch),
+                            spec=getattr(spec, "kind", str(spec)))
 
 
 @functools.lru_cache(maxsize=None)
@@ -215,7 +229,10 @@ class ColumnarScanPath(ScanCost):
 
     def query_batch(self, batch: T.QueryBatch,
                     spec: T.ResultSpec = T.IDS) -> Results:
-        return self._scan.query_batch(batch, spec=spec)
+        with _path_span(self, batch, spec) as sp:
+            out = self._scan.query_batch(batch, spec=spec)
+            sp.block_on(out)
+        return out
 
 
 class DistributedScanPath(ScanCost):
@@ -241,7 +258,10 @@ class DistributedScanPath(ScanCost):
 
     def query_batch(self, batch: T.QueryBatch,
                     spec: T.ResultSpec = T.IDS) -> Results:
-        return self._dist.query_batch(batch, spec=spec)
+        with _path_span(self, batch, spec) as sp:
+            out = self._dist.query_batch(batch, spec=spec)
+            sp.block_on(out)
+        return out
 
 
 class VerticalScanPath(VerticalScanCost):
@@ -272,7 +292,10 @@ class VerticalScanPath(VerticalScanCost):
 
     def query_batch(self, batch: T.QueryBatch,
                     spec: T.ResultSpec = T.IDS) -> Results:
-        return self._scan_ref().query_batch(batch, partial=True, spec=spec)
+        with _path_span(self, batch, spec) as sp:
+            out = self._scan_ref().query_batch(batch, partial=True, spec=spec)
+            sp.block_on(out)
+        return out
 
 
 class BlockedIndexPath(TreeCost):
@@ -297,7 +320,10 @@ class BlockedIndexPath(TreeCost):
 
     def query_batch(self, batch: T.QueryBatch,
                     spec: T.ResultSpec = T.IDS) -> Results:
-        return self._index.query_batch(batch, spec=spec)
+        with _path_span(self, batch, spec) as sp:
+            out = self._index.query_batch(batch, spec=spec)
+            sp.block_on(out)
+        return out
 
 
 class VAFilePath(VAFileCost):
@@ -323,7 +349,10 @@ class VAFilePath(VAFileCost):
 
     def query_batch(self, batch: T.QueryBatch,
                     spec: T.ResultSpec = T.IDS) -> Results:
-        return self._vafile.query_batch(batch, spec=spec)
+        with _path_span(self, batch, spec) as sp:
+            out = self._vafile.query_batch(batch, spec=spec)
+            sp.block_on(out)
+        return out
 
 
 class PerQueryPath:
@@ -363,17 +392,18 @@ class PerQueryPath:
     def query_batch(self, batch: T.QueryBatch,
                     spec: T.ResultSpec = T.IDS) -> Results:
         spec = T.validate_mode(spec)
-        if spec.kind == "ids":
-            return [self.query(batch[k]) for k in range(len(batch))]
-        if spec.kind == "count":
-            # the impl's own count (device-reduced where it has one)
-            return [self.count(batch[k]) for k in range(len(batch))]
-        if self._cols is None:
-            raise ValueError(
-                f"path {self.name!r} has no host columns for result spec "
-                f"{spec.kind!r}; construct PerQueryPath(..., cols=...)")
-        return [spec.from_ids(self.query(batch[k]), self._cols)
-                for k in range(len(batch))]
+        with _path_span(self, batch, spec):
+            if spec.kind == "ids":
+                return [self.query(batch[k]) for k in range(len(batch))]
+            if spec.kind == "count":
+                # the impl's own count (device-reduced where it has one)
+                return [self.count(batch[k]) for k in range(len(batch))]
+            if self._cols is None:
+                raise ValueError(
+                    f"path {self.name!r} has no host columns for result spec "
+                    f"{spec.kind!r}; construct PerQueryPath(..., cols=...)")
+            return [spec.from_ids(self.query(batch[k]), self._cols)
+                    for k in range(len(batch))]
 
     # A plannable=False path is never priced; keep the protocol total anyway.
     def cost(self, q: T.RangeQuery, sel: float, batch: int, model,

@@ -312,6 +312,47 @@ class CostModel:
             + self.host_sync_overhead / max(batch, 1) \
             + self.spec_host_cost(spec, blk_frac * self.n)
 
+    def modeled_bytes(self, method: str, sel: float, mq: int, bucket: int
+                      ) -> Optional[float]:
+        """Per-query bytes this model says ``method`` moves — the abscissa
+        of ``calibrate``'s lstsq fit, computed from a trace's (selectivity,
+        constrained dims, realized bucket) so production ``QueryTrace``
+        records can feed calibration (``obs.audit.calibration_samples``).
+
+        Mirrors the byte terms of the ``cost_*`` formulas (streamed bytes
+        amortized over the fused bucket, refinement bytes under the visit
+        bandwidth discount); per-launch taxes are what the fit's intercept
+        absorbs. Returns None for paths without a byte model (a registered
+        third-party path prices itself; it can calibrate itself too).
+        """
+        b = max(int(bucket), 1)
+        mq = max(int(mq), 1)
+        sel = min(max(float(sel), 1.0 / max(self.n, 1)), 1.0)
+        if method == "scan":
+            return self.n * self.m * self.bytes_per_val \
+                / (b * max(self.n_devices, 1))
+        if method == "scan_vertical":
+            return self.n * mq * self.bytes_per_val / b
+        if method == "rowscan":
+            return float(self.n * self.m * self.bytes_per_val)
+        if method in ("kdtree", "rstar"):
+            n_leaves = -(-self.n // self.tile_n)
+            prune = 2 * n_leaves * self.m * self.bytes_per_val / b
+            side = sel ** (1.0 / mq)
+            f = min(1.0, (side + self.leaf_side()) ** mq)
+            return prune + f * self.n * self.m * self.bytes_per_val \
+                / self.visit_bw_discount
+        if method == "vafile":
+            words = -(-self.m // VA_DIMS_PER_WORD)
+            # per-dim slack approximated from the whole-query selectivity
+            # (the trace does not carry per-dim estimates)
+            cand = min(1.0, (sel ** (1.0 / mq) + 2.0 / VA_CELLS) ** mq)
+            blk_frac = 1.0 - (1.0 - cand) ** self.tile_n
+            return self.n * words * 4 / b \
+                + blk_frac * self.n * self.m * self.bytes_per_val \
+                / self.visit_bw_discount
+        return None
+
     # -- vectorized per-path costs (batch planning) ------------------------
     # Same formulas as the scalar methods, evaluated for all Q queries of a
     # batch at once. ``bucket`` is the (Q,) per-query amortization size — the

@@ -49,6 +49,22 @@ def use_xla() -> bool:
     return _BACKEND == "xla"
 
 
+def set_backend(name: str) -> str:
+    """Switch the kernel backend mid-process; returns the previous backend.
+
+    The backend is read at *trace* time inside the jitted ops, and jit caches
+    key on shapes/statics only — an executable traced under the old backend
+    would be silently reused for any already-seen shape, so a switch must
+    drop the compilation caches to actually take effect.
+    """
+    global _BACKEND
+    prev = _BACKEND
+    if name != prev:
+        _BACKEND = name
+        jax.clear_caches()
+    return prev
+
+
 def default_interpret() -> bool:
     if _BACKEND == "interpret":
         return True
@@ -58,25 +74,51 @@ def default_interpret() -> bool:
 # -- launch / transfer instrumentation ---------------------------------------
 # Counters live outside jit (wrappers bump them per call, not per trace), so a
 # count of 1 really means one kernel launch / one device->host round trip.
+#
+# The store is the obs metrics registry (family "mdrq_launches_total",
+# labeled by op) rather than a module-private dict: spans attribute their
+# launch/sync budgets from the same counters tests assert on, and the
+# exporters ship them without a second accounting path. The historical
+# ``counter``/``counters``/``reset_counters`` API is preserved on top —
+# launch-budget tests run unchanged against the new backend.
 
-_COUNTERS: dict[str, int] = {}
+from repro.obs import metrics as _obs_metrics
+
+_LAUNCH_FAMILY = "mdrq_launches_total"
+_LAUNCH_HELP = ("Kernel launches (and device->host transfers, op=host_sync) "
+                "counted per public op wrapper call")
+# op name -> its registry Counter. Cached so the per-launch cost is one dict
+# lookup + one float add; registry reset() keeps these objects live.
+_COUNTERS: dict[str, _obs_metrics.Counter] = {}
+
+
+def _launch_counter(name: str) -> _obs_metrics.Counter:
+    c = _COUNTERS.get(name)
+    if c is None:
+        c = _obs_metrics.registry().counter(_LAUNCH_FAMILY, help=_LAUNCH_HELP,
+                                            op=name)
+        _COUNTERS[name] = c
+    return c
 
 
 def _bump(name: str) -> None:
-    _COUNTERS[name] = _COUNTERS.get(name, 0) + 1
+    _launch_counter(name).inc()
 
 
 def counter(name: str) -> int:
     """Launches of op ``name`` (or ``"host_sync"`` transfers) since reset."""
-    return _COUNTERS.get(name, 0)
+    c = _COUNTERS.get(name)
+    return int(c.value) if c is not None else 0
 
 
 def counters() -> dict[str, int]:
-    return dict(_COUNTERS)
+    """Nonzero per-op launch counts since the last reset."""
+    return {name: int(c.value) for name, c in _COUNTERS.items() if c.value}
 
 
 def reset_counters() -> None:
-    _COUNTERS.clear()
+    for c in _COUNTERS.values():
+        c.reset()
 
 
 def device_get(x):

@@ -1,0 +1,249 @@
+"""Query-path tracing: lightweight spans + per-query ``QueryTrace`` records.
+
+The span API is deliberately tiny (DESIGN.md §10):
+
+    with obs.span("plan"):
+        ...
+    with obs.span("kernel", path="scan") as sp:
+        out = launch(...)
+        sp.block_on(out)          # device-sync-aware close
+
+Spans are **host-side** objects — they never enter jit. A span wrapping a
+kernel launch would otherwise stop its clock at *dispatch* (jax is async):
+``Span.block_on`` registers device values and the close blocks on them
+(``jax.block_until_ready``), so a kernel span measures device time, not how
+fast Python returned. This is also why spans must not be opened *inside*
+jit-traced Python: that code runs once at trace time and never again, so the
+span would time tracing, not execution ("no trace-time capture"). Wrap the
+jitted call, never the jitted body.
+
+Cost when disabled is one module-global load and an ``is None`` check:
+``span(...)`` returns the shared ``NULL_SPAN`` singleton — no object is
+allocated on the hot path, which is what keeps ``trace=False`` execution at
+zero overhead.
+
+Launch/host-sync attribution: every span snapshots the metrics registry's
+``mdrq_launches_total`` family at open and close (the same counters
+``kernels.ops`` bumps and tests assert budgets on), so a span knows exactly
+how many kernel launches and host syncs happened under it — wall-clock
+measurements on CPU cannot see either.
+
+``QueryTrace``/``BatchTrace`` are the records ``MDRQEngine.query_batch(...,
+trace=True)`` produces: per query, the planner's chosen path, realized
+bucket, estimated selectivity and cost, the realized result count (and the
+observed selectivity where the spec makes it derivable), plus the bucket's
+measured seconds / launches / host syncs. The drift audit (``obs.audit``)
+and Flood-style layout learning both consume exactly these records.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+from repro.obs import metrics as _metrics
+
+# The one counter family the kernel layer bumps (see kernels/ops.py); the
+# device->host sync pseudo-op lives in the same family under this op label.
+LAUNCH_FAMILY = "mdrq_launches_total"
+HOST_SYNC_OP = "host_sync"
+
+
+def _launch_snapshot() -> tuple[float, float]:
+    """(kernel launches, host syncs) since process start, from the registry."""
+    launches = 0.0
+    syncs = 0.0
+    for m in _metrics.registry().series(LAUNCH_FAMILY):
+        if m.labels.get("op") == HOST_SYNC_OP:
+            syncs += m.value
+        else:
+            launches += m.value
+    return launches, syncs
+
+
+class Span:
+    """One timed region. Context manager; closes device-sync-aware."""
+
+    __slots__ = ("name", "attrs", "seconds", "children", "launches",
+                 "host_syncs", "_tracer", "_t0", "_c0", "_pending")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: dict[str, Any]):
+        self.name = name
+        self.attrs = attrs
+        self.seconds = 0.0
+        self.children: list[Span] = []
+        self.launches = 0
+        self.host_syncs = 0
+        self._tracer = tracer
+        self._t0 = 0.0
+        self._c0 = (0.0, 0.0)
+        self._pending: list = []
+
+    def set(self, **attrs) -> "Span":
+        """Attach attributes after open (result counts, bucket sizes, ...)."""
+        self.attrs.update(attrs)
+        return self
+
+    def block_on(self, x) -> None:
+        """Register a device value the span close must block on, so the span
+        measures device completion rather than async dispatch."""
+        self._pending.append(x)
+
+    def __enter__(self) -> "Span":
+        self._tracer._push(self)
+        self._c0 = _launch_snapshot()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if self._pending:
+            import jax
+            jax.block_until_ready(self._pending)
+            self._pending = []
+        self.seconds = time.perf_counter() - self._t0
+        c1 = _launch_snapshot()
+        self.launches = int(c1[0] - self._c0[0])
+        self.host_syncs = int(c1[1] - self._c0[1])
+        self._tracer._pop(self)
+
+    def find(self, name: str) -> list["Span"]:
+        """All descendant spans (and self) with the given name, pre-order."""
+        out = [self] if self.name == name else []
+        for c in self.children:
+            out.extend(c.find(name))
+        return out
+
+    def __repr__(self) -> str:
+        return (f"Span({self.name!r}, {self.seconds * 1e6:.0f}us, "
+                f"launches={self.launches}, host_syncs={self.host_syncs}, "
+                f"attrs={self.attrs})")
+
+
+class _NullSpan:
+    """The disabled-tracing singleton: every method is a no-op. ``span()``
+    returns this exact object when no tracer is active, so the hot path
+    allocates nothing."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        return None
+
+    def set(self, **attrs) -> "_NullSpan":
+        return self
+
+    def block_on(self, x) -> None:
+        return None
+
+
+NULL_SPAN = _NullSpan()
+
+# The active tracer (module global — the process is single-threaded through
+# the engine; an async server would swap this for a contextvar).
+_TRACER: Optional["Tracer"] = None
+
+
+def enabled() -> bool:
+    return _TRACER is not None
+
+
+def span(name: str, **attrs):
+    """Open a span under the active tracer, or the no-op singleton when
+    tracing is disabled."""
+    t = _TRACER
+    if t is None:
+        return NULL_SPAN
+    return Span(t, name, attrs)
+
+
+def current() -> Optional["Tracer"]:
+    return _TRACER
+
+
+class Tracer:
+    """Collects a span tree. ``with Tracer() as t:`` installs it as the
+    active tracer (nesting restores the previous one on exit)."""
+
+    def __init__(self):
+        self.spans: list[Span] = []   # root spans, in open order
+        self._stack: list[Span] = []
+        self._prev: Optional[Tracer] = None
+
+    def __enter__(self) -> "Tracer":
+        global _TRACER
+        self._prev = _TRACER
+        _TRACER = self
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        global _TRACER
+        _TRACER = self._prev
+        self._prev = None
+
+    def _push(self, s: Span) -> None:
+        (self._stack[-1].children if self._stack else self.spans).append(s)
+        self._stack.append(s)
+
+    def _pop(self, s: Span) -> None:
+        if self._stack and self._stack[-1] is s:
+            self._stack.pop()
+
+    def find(self, name: str) -> list[Span]:
+        out = []
+        for s in self.spans:
+            out.extend(s.find(name))
+        return out
+
+
+# =============================================================================
+# Query-trace records (what the engine emits under trace=True)
+# =============================================================================
+
+@dataclasses.dataclass(slots=True)
+class QueryTrace:
+    """One query's observed execution, planner estimates included.
+
+    ``seconds``/``launches``/``host_syncs`` are the query's *amortized share*
+    of its fused launch bucket (bucket totals divided by ``bucket_size``) —
+    the same amortization the cost model prices, so estimated and measured
+    costs are directly comparable. ``obs_selectivity`` is the realized
+    match fraction where the result shape makes it derivable (ids / count /
+    mask), else None.
+    """
+
+    index: int                     # position in the submitted batch
+    method: str                    # access path executed
+    bucket_size: int               # realized fused-launch bucket
+    est_selectivity: float         # planner estimate (histograms)
+    est_cost: float                # planner cost estimate, seconds (NaN when
+    #                                the method was explicit, not planned)
+    spec_kind: str                 # result shape served
+    mq: int                        # constrained dims (audit's bytes model)
+    result_size: int               # realized result magnitude (spec-typed)
+    obs_selectivity: Optional[float]
+    seconds: float                 # measured wall share of the bucket
+    launches: float                # kernel launches / bucket_size
+    host_syncs: float              # host syncs / bucket_size
+
+
+@dataclasses.dataclass
+class BatchTrace:
+    """One ``query_batch(trace=True)`` execution: per-query records plus the
+    batch-level plan/execute breakdown and the raw span tree."""
+
+    n: int                         # dataset objects (obs selectivity divisor)
+    n_queries: int
+    spec_kind: str
+    plan_seconds: float
+    seconds: float
+    queries: list[QueryTrace]
+    spans: list[Span]
+
+    def by_method(self) -> dict[str, list[QueryTrace]]:
+        out: dict[str, list[QueryTrace]] = {}
+        for t in self.queries:
+            out.setdefault(t.method, []).append(t)
+        return out

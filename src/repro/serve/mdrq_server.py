@@ -25,6 +25,15 @@ with the reduction running on device so reduced shapes never pay the
 per-query host-side ``nonzero`` that dominates large result sets.
 ``ServerStats`` buckets served queries by spec kind. The legacy
 ``mode="ids"|"count"`` strings keep working with a DeprecationWarning.
+
+Observability (DESIGN.md §10): every flush records *why* it fired ("size" |
+"deadline" | "forced") — in ``ServerStats.flush_reasons``, in the global
+metrics registry (``mdrq_server_flushes_total{reason=...}``), and on every
+retained entry of the bounded reservoir-sampled ``query_log`` — so
+deadline-triggered idle-stream flushes are distinguishable from
+size-triggered ones after the fact. Per-query queue latency
+(submit -> flush start) and execute latency land in per-spec-kind
+histograms; ``ServerStats.latency_percentiles(kind)`` reports p50/p95/p99.
 """
 from __future__ import annotations
 
@@ -34,6 +43,8 @@ from typing import Any, Optional, Union
 
 import numpy as np
 
+from repro import obs
+from repro.obs import tracing as obs_tracing
 from repro.core import MDRQEngine, RangeQuery
 from repro.core.types import ResultSpec, resolve_spec
 
@@ -75,6 +86,14 @@ class ServerStats:
     method_counts: dict[str, int] = dataclasses.field(default_factory=dict)
     # served queries bucketed by result-spec kind ("ids", "count", "topk", ...)
     spec_counts: dict[str, int] = dataclasses.field(default_factory=dict)
+    # flushes bucketed by trigger ("size" | "deadline" | "forced")
+    flush_reasons: dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-spec-kind latency histograms: queue (submit -> flush start) and
+    # execute (the query's batch execution wall time), observed per query
+    queue_latency: dict[str, obs.Histogram] = dataclasses.field(
+        default_factory=dict)
+    execute_latency: dict[str, obs.Histogram] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def qps(self) -> float:
@@ -83,6 +102,31 @@ class ServerStats:
     @property
     def mean_batch_size(self) -> float:
         return self.n_queries / self.n_batches if self.n_batches else 0.0
+
+    @staticmethod
+    def _latency_hist(table: dict, stage: str, kind: str) -> obs.Histogram:
+        h = table.get(kind)
+        if h is None:
+            h = table[kind] = obs.Histogram(f"mdrq_{stage}_seconds",
+                                            {"kind": kind})
+        return h
+
+    def observe_latency(self, kind: str, queue_s: float,
+                        execute_s: float) -> None:
+        """Record one query's queue + execute latency under its spec kind."""
+        self._latency_hist(self.queue_latency, "queue", kind).observe(queue_s)
+        self._latency_hist(self.execute_latency, "execute",
+                           kind).observe(execute_s)
+
+    def latency_percentiles(self, kind: str) -> dict[str, dict[str, float]]:
+        """p50/p95/p99 queue + execute latency (seconds) for one spec kind;
+        empty dicts before any query of that kind was served."""
+        out: dict[str, dict[str, float]] = {}
+        for name, table in (("queue", self.queue_latency),
+                            ("execute", self.execute_latency)):
+            h = table.get(kind)
+            out[name] = h.percentiles((50, 95, 99)) if h is not None else {}
+        return out
 
 
 class MDRQServer:
@@ -96,6 +140,7 @@ class MDRQServer:
         method: str = "auto",
         spec: Optional[ResultSpec] = None,
         mode: Optional[str] = None,
+        query_log_capacity: int = 512,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -105,7 +150,10 @@ class MDRQServer:
         self.method = method
         self.spec = resolve_spec(spec, mode).validate(engine.dataset.m)
         self.stats = ServerStats()
-        self._pending: list[tuple[RangeQuery, Ticket]] = []
+        # bounded uniform sample of everything ever served (obs.QueryLog) —
+        # the drift audit's and any layout learner's workload input
+        self.query_log = obs.QueryLog(capacity=query_log_capacity)
+        self._pending: list[tuple[RangeQuery, Ticket, float]] = []
         self._oldest_t: float = 0.0
 
     @property
@@ -120,12 +168,14 @@ class MDRQServer:
             raise ValueError(
                 f"query dims {q.m} != dataset dims {self.engine.dataset.m}")
         ticket = Ticket(self, spec=self.spec)
+        now = time.perf_counter()
         if not self._pending:
-            self._oldest_t = time.perf_counter()
-        self._pending.append((q, ticket))
-        if (len(self._pending) >= self.max_batch
-                or time.perf_counter() - self._oldest_t >= self.max_wait_s):
-            self.flush()
+            self._oldest_t = now
+        self._pending.append((q, ticket, now))
+        if len(self._pending) >= self.max_batch:
+            self.flush(reason="size")
+        elif now - self._oldest_t >= self.max_wait_s:
+            self.flush(reason="deadline")
         return ticket
 
     def poll(self) -> int:
@@ -136,23 +186,33 @@ class MDRQServer:
         no further arrivals, pending queries would sit past their deadline
         with no flush path short of ``Ticket.result()``. An admission loop
         calls this on its idle ticks. Returns the flushed batch size (0 when
-        nothing is due).
+        nothing is due). Flushes from here are ``reason="deadline"`` — they
+        carry that tag into the query log and the flush trace event, so idle-
+        stream deadline flushes are distinguishable from size-triggered ones.
         """
         if (self._pending
                 and time.perf_counter() - self._oldest_t >= self.max_wait_s):
-            return self.flush()
+            return self.flush(reason="deadline")
         return 0
 
-    def flush(self) -> int:
-        """Execute everything pending as one batch; returns its size."""
+    def flush(self, reason: str = "forced") -> int:
+        """Execute everything pending as one batch; returns its size.
+
+        ``reason`` names the trigger ("size" | "deadline" | "forced") and is
+        recorded in ``stats.flush_reasons``, in the registry counter
+        ``mdrq_server_flushes_total{reason=...}``, on every retained query-log
+        entry, and as a ``flush`` trace event when a tracer is active.
+        """
         if not self._pending:
             return 0
         pending, self._pending = self._pending, []
-        queries = [q for q, _ in pending]
+        queries = [q for q, _, _ in pending]
         t0 = time.perf_counter()
         try:
-            results = self.engine.query_batch(queries, method=self.method,
-                                              spec=self.spec)
+            with obs_tracing.span("flush", reason=reason,
+                                  n_queries=len(pending)):
+                results = self.engine.query_batch(queries, method=self.method,
+                                                  spec=self.spec)
         except Exception:
             # don't lose co-batched queries: put them back (in order) so
             # their tickets remain resolvable after the caller handles the
@@ -160,19 +220,34 @@ class MDRQServer:
             self._pending = pending + self._pending
             raise
         dt = time.perf_counter() - t0
-        for (_, ticket), res in zip(pending, results):
+        for (_, ticket, _), res in zip(pending, results):
             ticket._result = res
             ticket._done = True
-        self.stats.n_queries += len(pending)
         kind = self.spec.kind
+        batch_stats = self.engine.last_batch_stats
+        methods = batch_stats.methods or [self.method] * len(pending)
+        for (q, _, t_submit), res, meth in zip(pending, results, methods):
+            queue_s = t0 - t_submit
+            self.stats.observe_latency(kind, queue_s, dt)
+            self.query_log.offer(obs.QueryLogEntry(
+                lower=q.lower, upper=q.upper, spec_kind=kind, method=meth,
+                result_size=self.spec.result_size(res),
+                queue_seconds=queue_s, execute_seconds=dt,
+                flush_reason=reason, batch_size=len(pending)))
+        self.stats.n_queries += len(pending)
         self.stats.spec_counts[kind] = \
             self.stats.spec_counts.get(kind, 0) + len(pending)
         self.stats.n_batches += 1
         self.stats.busy_seconds += dt
-        self.stats.plan_seconds += self.engine.last_batch_stats.plan_seconds
-        self.stats.n_results += self.engine.last_batch_stats.n_results
-        for m, c in self.engine.last_batch_stats.method_counts.items():
+        self.stats.plan_seconds += batch_stats.plan_seconds
+        self.stats.n_results += batch_stats.n_results
+        for m, c in batch_stats.method_counts.items():
             self.stats.method_counts[m] = self.stats.method_counts.get(m, 0) + c
+        self.stats.flush_reasons[reason] = \
+            self.stats.flush_reasons.get(reason, 0) + 1
+        obs.registry().counter(
+            "mdrq_server_flushes_total",
+            help="server batch flushes, by trigger", reason=reason).inc()
         return len(pending)
 
     def serve_all(self, queries: list[RangeQuery]

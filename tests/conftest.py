@@ -3,7 +3,20 @@ multi-device behaviour is tested via subprocesses (test_distributed.py)."""
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import Dataset
+from repro.kernels import ops
+
+
+@pytest.fixture(autouse=True)
+def reset_metrics():
+    """Zero the launch/host-sync counters and every other registry metric
+    before each test — launch-budget assertions and exporter tests never see
+    another test's traffic. (``registry().reset()`` keeps the metric objects,
+    so references cached in ``kernels.ops`` stay live.)"""
+    ops.reset_counters()
+    obs.registry().reset()
+    yield
 
 
 @pytest.fixture(scope="session")
