@@ -2,7 +2,8 @@
 PYTHONPATH := src
 
 .PHONY: test test-dist smoke lint bench-throughput bench-count bench-specs \
-        bench-specs-smoke bench-smoke bench-dist bench
+        bench-specs-smoke bench-smoke bench-ingest bench-ingest-smoke \
+        bench-dist bench
 
 # Tier-1 verify: the full test suite, fail-fast.
 test:
@@ -48,6 +49,15 @@ BENCH_SMOKE_OUT ?= BENCH_smoke.json
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_throughput --smoke \
 	--json $(BENCH_SMOKE_OUT)
+
+# Serve-while-ingest sweep: qps vs delta fraction + post-compaction recovery.
+bench-ingest:
+	PYTHONPATH=src python -m benchmarks.run --only throughput-ingest
+
+# CI-sized ingest smoke: same sweep at tiny n so a write-path serving
+# regression (delta scan tax, compaction stall) surfaces in CI logs.
+bench-ingest-smoke:
+	PYTHONPATH=src python -m benchmarks.bench_throughput --ingest --smoke
 
 # Cross-device batched scan sweep on the 8-device CPU proxy.
 bench-dist:

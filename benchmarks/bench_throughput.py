@@ -16,6 +16,7 @@ is the row-to-row delta. ``run_count`` keeps the PR 2 count-only sweep.
 """
 import os
 import sys
+import time
 
 if __name__ == "__main__":  # direct module run: set the backend before any
     os.environ.setdefault("REPRO_KERNEL_BACKEND", "xla")  # repro import
@@ -191,6 +192,58 @@ def run_smoke(json_path: str = "BENCH_smoke.json", spec=Ids()) -> None:
         n=eng.dataset.n, n_queries=n_queries, spec=kind, batches=batches)
 
 
+def run_ingest(quick: bool = True, smoke: bool = False) -> None:
+    """Serve-while-ingest sweep: qps vs delta fraction (``make bench-ingest``).
+
+    Grows the delta segment to {0, 0.5, 1, 2, 5}% of the base dataset (with
+    ~10% of each appended slab immediately tombstoned — writes in both
+    directions), re-measuring mixed-workload Count qps at the largest batch
+    after each step. The ``vs_delta0`` column is the serving tax of the
+    un-compacted write path: every batch pays one extra delta-block scan
+    inside the same fused launch, so the tax should track the delta's byte
+    fraction, not a per-query launch penalty. A final compaction row
+    (fresh structures, empty delta) closes the loop — qps recovers to the
+    frozen-path rate and the row carries the compact() wall time.
+
+    The ingest ops go through ``MDRQServer.append``/``delete``/``compact``
+    so each step also exercises the window-flush interleaving that serving
+    traffic sees (flush_reason="ingest").
+    """
+    eng, mixed, _ = _workload(quick, smoke=smoke)
+    batch = 32 if smoke else BATCH_SIZES[-1]
+    rng = np.random.default_rng(7)
+    n = eng.dataset.n
+    ingest = MDRQServer(eng, max_batch=batch, max_wait_s=float("inf"),
+                        spec=Count())
+
+    base_qps = None
+    for frac in (0.0, 0.005, 0.01, 0.02, 0.05):
+        target = int(round(frac * n))
+        grow = target - eng.delta.d
+        if grow > 0:
+            new_ids = ingest.append(
+                rng.random((grow, eng.dataset.m)).astype(np.float32))
+            if grow >= 10:
+                ingest.delete(new_ids[:: 10])
+        r, stats = _throughput(eng, mixed, batch, spec=Count())
+        base_qps = base_qps or r
+        emit_row(f"throughput/ingest/delta{100 * frac:g}pct/B{batch}",
+                 1e6 / r,
+                 f"qps={r:.1f};vs_delta0={r / base_qps:.2f}x;"
+                 f"delta_rows={eng.delta.d};"
+                 f"plan_us_per_q={_plan_us(stats):.1f}",
+                 result_spec="count")
+
+    t0 = time.perf_counter()
+    ingest.compact()
+    compact_s = time.perf_counter() - t0
+    r, _ = _throughput(eng, mixed, batch, spec=Count())
+    emit_row(f"throughput/ingest/compacted/B{batch}", 1e6 / r,
+             f"qps={r:.1f};vs_delta0={r / base_qps:.2f}x;"
+             f"compact_s={compact_s:.3f};n={eng.dataset.n}",
+             result_spec="count")
+
+
 def run_devices(quick: bool = True) -> None:
     """Cross-device batched-scan sweep (``--devices`` / ``make bench-dist``).
 
@@ -239,6 +292,9 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized inputs (tiny n, one spec row) — the "
                          "reducer-regression smoke")
+    ap.add_argument("--ingest", action="store_true",
+                    help="serve-while-ingest sweep: qps vs delta fraction, "
+                         "plus the post-compaction recovery row")
     ap.add_argument("--devices", action="store_true",
                     help="cross-device batched scan sweep (forces an "
                          "8-device CPU platform when XLA_FLAGS is unset)")
@@ -250,6 +306,8 @@ if __name__ == "__main__":
     print(CSV_HEADER, flush=True)
     if args.devices:
         run_devices(quick=not args.full)
+    elif args.ingest:
+        run_ingest(quick=not args.full, smoke=args.smoke)
     elif args.spec == "count":
         run_count(quick=not args.full)
     elif args.spec in ("topk", "agg", "mask"):

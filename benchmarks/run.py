@@ -32,6 +32,8 @@ SECTIONS = [
     ("throughput-count", "benchmarks.bench_throughput", "run_count"),
     # reduced result shapes (top-k / aggregate) vs ids at the largest batch
     ("throughput-specs", "benchmarks.bench_throughput", "run_specs"),
+    # serve-while-ingest: qps vs delta fraction + post-compaction recovery
+    ("throughput-ingest", "benchmarks.bench_throughput", "run_ingest"),
     # multi-device sweep: needs XLA_FLAGS=--xla_force_host_platform_device_
     # count=8 in the environment (see `make bench-dist`); degrades to a D1
     # row + a pointer when the process only sees one device.

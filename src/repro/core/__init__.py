@@ -8,12 +8,15 @@ Public API:
     ``build_kdtree``, ``build_rstar``, ``build_vafile``, ``DistributedScan``
   * access-path layer: ``AccessPath`` protocol + adapters (``core.paths``)
   * planning: ``Planner``, ``Histograms``, ``CostModel``, ``BatchPlan``
+  * mutable plane: ``MutableDelta``, ``DeltaView``, ``Compactor``
+    (``MDRQEngine.append`` / ``delete`` / ``compact``)
 """
-from repro.core.types import (Agg, Count, Dataset, Ids, Mask, QueryBatch,
-                              RangeQuery, RESULT_MODES, ResultSpec, TopK,
-                              match_ids_np, match_mask_np,
+from repro.core.types import (Agg, Count, Dataset, DeltaHostCtx, Ids, Mask,
+                              QueryBatch, RangeQuery, RESULT_MODES,
+                              ResultSpec, TopK, match_ids_np, match_mask_np,
                               register_result_spec, resolve_spec,
                               validate_mode)
+from repro.core.delta import Compactor, DeltaView, MutableDelta
 from repro.core.engine import MDRQEngine, ALL_METHODS, BatchStats
 from repro.core.paths import AccessPath, PerQueryPath, PlanInputs
 from repro.core.scan import build_columnar_scan, build_row_scan
@@ -27,8 +30,9 @@ from repro.core.distributed import DistributedScan, make_data_mesh
 __all__ = [
     "Dataset", "QueryBatch", "RangeQuery", "RESULT_MODES", "match_ids_np",
     "match_mask_np", "validate_mode", "resolve_spec",
-    "ResultSpec", "Ids", "Count", "Mask", "TopK", "Agg",
+    "ResultSpec", "Ids", "Count", "Mask", "TopK", "Agg", "DeltaHostCtx",
     "register_result_spec",
+    "MutableDelta", "DeltaView", "Compactor",
     "MDRQEngine", "ALL_METHODS", "BatchStats",
     "AccessPath", "PerQueryPath", "PlanInputs",
     "build_columnar_scan", "build_row_scan", "build_kdtree", "build_rstar",

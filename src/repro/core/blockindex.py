@@ -165,6 +165,7 @@ def reduce_visits_batch(
     spec: T.ResultSpec,
     n: int,
     perm: np.ndarray | None = None,
+    delta=None,
 ) -> list:
     """Phase 2 of every batched two-phase path, under any ResultSpec.
 
@@ -173,9 +174,31 @@ def reduce_visits_batch(
     on-device visit reducer in the same jit), fetches the payload in one
     host sync, and finalizes per query. Shared by the tree MDIS and the
     VA-file so a new result shape lands on both at once.
+
+    ``delta`` (a ``core.delta.DeltaView``) rides the same launch: base
+    tombstones gather per visited block and AND into the visit masks, the
+    delta block scans with the batch bounds, and the spec merges the halves.
     """
+    dview = delta if delta is not None and not delta.is_empty else None
+    dcm = dview.device_cm(tile_n) if dview is not None else None
     if query_ids.size == 0:
-        return [spec.empty_result(n) for _ in range(n_queries)]
+        # Nothing pruned through — but a non-empty delta still has to scan.
+        # This corner pays one delta-only launch (vs zero on a frozen
+        # dataset); the normal non-empty-visit case stays at one launch.
+        base = [spec.empty_result(n) for _ in range(n_queries)]
+        if dcm is None:
+            return base
+        lo_d, up_d = ops.batch_bounds_device(batch, dcm.shape[0], dcm.dtype,
+                                             q_pad=_next_pow2(len(batch)))
+        payload = ops.multi_scan_reduce(dcm, lo_d, up_d, spec=spec,
+                                        tile_n=tile_n)
+        dres = spec.finalize(ops.device_get(payload), n_queries, dview.d)
+        return spec.merge_delta(base, dres, dview.host_ctx())
+    tomb = None
+    if dview is not None:
+        key = None if perm is None else ("perm", id(perm),
+                                         int(data_dev.shape[1]))
+        tomb = dview.base_tomb_dev(data_dev.shape[1], perm=perm, key=key)
     qids_p, bids_p = _pad_visit_list(query_ids, block_ids)
     q_bucket = _next_pow2(max(n_queries, 1))  # pow2 bounds jit retraces
     # The per-query visit-index table only feeds TopK's gather; every other
@@ -192,13 +215,18 @@ def reduce_visits_batch(
     payload = ops.multi_visit_reduce(
         data_dev, jnp.asarray(qids_p), jnp.asarray(bids_p),
         jnp.asarray((bids_p >= 0).astype(np.int32)),
-        jnp.asarray(visit_index), lo_d, up_d,
+        jnp.asarray(visit_index), lo_d, up_d, dcm, tomb,
         spec=spec, tile_n=tile_n, n_queries=q_bucket,
     )
-    host = ops.device_get(payload)
-    return spec.finalize_visits(host, T.VisitHostCtx(
+    vctx = T.VisitHostCtx(
         qids=query_ids.astype(np.int32), bids=block_ids.astype(np.int32),
-        tile_n=tile_n, n=n, n_queries=n_queries, perm=perm))
+        tile_n=tile_n, n=n, n_queries=n_queries, perm=perm)
+    if dcm is None:
+        return spec.finalize_visits(ops.device_get(payload), vctx)
+    base_host, delta_host = ops.device_get(payload)
+    base = spec.finalize_visits(base_host, vctx)
+    dres = spec.finalize(delta_host, n_queries, dview.d)
+    return spec.merge_delta(base, dres, dview.host_ctx())
 
 
 def scatter_visit_results(
@@ -315,8 +343,8 @@ class BlockedIndex:
         # padding visits (id -1, clamped to block 0) are sliced off on device
         return int(ops.device_get(jnp.sum(masks[: survivors.size] != 0)))
 
-    def query_batch(self, batch: T.QueryBatch, spec: T.ResultSpec = T.IDS
-                    ) -> list:
+    def query_batch(self, batch: T.QueryBatch, spec: T.ResultSpec = T.IDS,
+                    delta=None) -> list:
         """Batched two-phase query: one prune jit + one fused visit launch.
 
         Phase 1 prunes all Q queries' hierarchies in a single vectorized
@@ -340,6 +368,7 @@ class BlockedIndex:
         return reduce_visits_batch(
             self.data_dev, qids.astype(np.int32), bids.astype(np.int32),
             batch, self.tile_n, q_n, spec, self.n, perm=self.perm,
+            delta=delta,
         )
 
 

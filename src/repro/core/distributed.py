@@ -256,6 +256,8 @@ def _distributed_multi_reduce_jit(
     data_sharded: jax.Array,
     lower: jax.Array,
     upper: jax.Array,
+    delta_cm: jax.Array | None = None,
+    base_tomb: jax.Array | None = None,
     *,
     spec,
     tile_n: int = 1024,
@@ -264,24 +266,51 @@ def _distributed_multi_reduce_jit(
     if interpret is None:
         interpret = ops.default_interpret()
 
-    def local_reduce(data_local, lo, up):
-        mask = _local_multi_scan(data_local, lo, up, tile_n=tile_n,
-                                 interpret=interpret)
-        # Shard-local partials + the spec's collective merge (psum counts,
-        # pmin/pmax/psum aggregates, all_gather'd (Q, k) top-k partials) —
-        # mirroring the count psum: only the reduced payload crosses the
-        # collective. Identity specs return the shard-local mask.
-        return spec.distributed_reduce(mask, data_local, "data")
+    # Ids/Mask payloads stay sharded over objects (the paper's "partial
+    # result sets", never concatenated); reduced payloads replicate.
+    out_specs = P(None, "data") if spec.sharded_payload else P()
 
-    fn = shard_map_compat(
-        local_reduce,
-        mesh=mesh,
-        in_specs=(P(None, "data"), P(), P()),
-        # Ids/Mask payloads stay sharded over objects (the paper's "partial
-        # result sets", never concatenated); reduced payloads replicate.
-        out_specs=P(None, "data") if spec.sharded_payload else P(),
-    )
-    return fn(data_sharded, lower, upper)
+    if base_tomb is None:
+        def local_reduce(data_local, lo, up):
+            mask = _local_multi_scan(data_local, lo, up, tile_n=tile_n,
+                                     interpret=interpret)
+            # Shard-local partials + the spec's collective merge (psum
+            # counts, pmin/pmax/psum aggregates, all_gather'd (Q, k) top-k
+            # partials) — mirroring the count psum: only the reduced payload
+            # crosses the collective. Identity specs return the shard-local
+            # mask.
+            return spec.distributed_reduce(mask, data_local, "data")
+
+        fn = shard_map_compat(
+            local_reduce,
+            mesh=mesh,
+            in_specs=(P(None, "data"), P(), P()),
+            out_specs=out_specs,
+        )
+        base = fn(data_sharded, lower, upper)
+    else:
+        def local_reduce_tomb(data_local, lo, up, tomb_local):
+            from repro.kernels import reducers as _red
+            mask = _local_multi_scan(data_local, lo, up, tile_n=tile_n,
+                                     interpret=interpret)
+            # The tombstone vector shards with the data axis, so the fold is
+            # shard-local — no extra collective.
+            mask = _red.fold_tombstones(mask, tomb_local)
+            return spec.distributed_reduce(mask, data_local, "data")
+
+        fn = shard_map_compat(
+            local_reduce_tomb,
+            mesh=mesh,
+            in_specs=(P(None, "data"), P(), P(), P("data")),
+            out_specs=out_specs,
+        )
+        base = fn(data_sharded, lower, upper, base_tomb)
+    if delta_cm is None:
+        return base
+    # The delta block is tiny and replicated: scan + reduce it outside the
+    # shard_map (every device computes the same payload, no collective).
+    return base, ops._delta_payload(delta_cm, lower, upper, spec=spec,
+                                    tile_n=tile_n, interpret=interpret)
 
 
 distributed_multi_reduce = ops.counted(
@@ -355,14 +384,32 @@ class DistributedScan:
                                           tile_n=self.tile_n)
         return [int(c) for c in ops.device_get(counts)[: len(batch)]]
 
-    def query_batch(self, batch, spec=T.IDS) -> list:
+    def query_batch(self, batch, spec=T.IDS, delta=None) -> list:
         """Batched execution under any ResultSpec: one collective launch
         (scan + the spec's shard-local reduce + its collective merge, all in
-        the same shard_map jit) and one host sync for the payload."""
+        the same shard_map jit) and one host sync for the payload.
+
+        ``delta`` folds the mutable plane into the same launch: the base
+        tombstone vector shards with the data axis and ANDs in shard-locally;
+        the small delta block replicates and scans outside the shard_map.
+        """
         spec = T.validate_mode(spec).validate(self.m)
         from repro.core.scan import bucketed_batch_bounds
         batch = self._as_batch(batch)
         _, lo, up = bucketed_batch_bounds(batch, self.m_pad, self.data.dtype)
+        dcm = tomb = None
+        if delta is not None and not delta.is_empty:
+            dcm = delta.device_cm(self.tile_n)
+            tomb = delta.base_tomb_dev(
+                self.data.shape[1], key=("dist", int(self.data.shape[1])),
+                put=lambda h: jax.device_put(
+                    jnp.asarray(h), NamedSharding(self.mesh, P("data"))))
         payload = distributed_multi_reduce(self.mesh, self.data, lo, up,
+                                           dcm, tomb,
                                            spec=spec, tile_n=self.tile_n)
-        return spec.finalize(ops.device_get(payload), len(batch), self.n)
+        if dcm is None:
+            return spec.finalize(ops.device_get(payload), len(batch), self.n)
+        base_host, delta_host = ops.device_get(payload)
+        base = spec.finalize(base_host, len(batch), self.n)
+        dres = spec.finalize(delta_host, len(batch), delta.d)
+        return spec.merge_delta(base, dres, delta.host_ctx())

@@ -32,6 +32,7 @@ via another if/elif sweep.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Optional, Sequence, Union
 
@@ -40,6 +41,7 @@ import numpy as np
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
 from repro.core import types as T
+from repro.core import delta as delta_mod
 from repro.core import scan as scan_mod
 from repro.core import paths as paths_mod
 from repro.core.distributed import DistributedScan
@@ -94,19 +96,30 @@ def _n_results(spec: T.ResultSpec, results: Sequence) -> int:
     return int(sum(spec.result_size(r) for r in results))
 
 
-class MDRQEngine:
-    """Build-once, query-many MDRQ engine (analytical workloads, §1)."""
+def _lookup_path(paths: dict, method: str) -> paths_mod.AccessPath:
+    path = paths.get(method)
+    if path is None:
+        raise ValueError(f"unknown method {method!r}; "
+                         f"options: {tuple(paths)} or 'auto'")
+    return path
 
-    def __init__(
-        self,
-        dataset: T.Dataset,
-        structures: tuple[str, ...] = ("scan", "kdtree", "rstar", "vafile"),
-        tile_n: int = 1024,
-        rowscan: bool = False,
-        mesh=None,
-    ):
+
+class _EngineState:
+    """One immutable *version* of the engine: frozen structures built from a
+    dataset snapshot, their access-path registry + planner, and the mutable
+    delta segment layered on top (DESIGN.md §11).
+
+    Queries read ``MDRQEngine._state`` exactly once and work off the captured
+    object, so the compactor's atomic swap — a single attribute assignment —
+    can never mix structures from two versions inside one batch; in-flight
+    batches simply finish on the version they captured.
+    """
+
+    def __init__(self, dataset: T.Dataset, structures: tuple[str, ...],
+                 tile_n: int, rowscan: bool, mesh, version: int = 0):
         self.dataset = dataset
         self.tile_n = tile_n
+        self.version = version
         # With a mesh, "scan" executes as the cross-device batched scan: data
         # sharded over the 'data' axis, one collective launch per batch
         # (horizontal partitioning, §3.1). Other paths stay single-device —
@@ -122,6 +135,9 @@ class MDRQEngine:
         self.rstar = build_rstar(dataset, tile_n=tile_n) if "rstar" in structures else None
         self.vafile = build_vafile(dataset, tile_n=tile_n) if "vafile" in structures else None
         self.hist = Histograms.build(dataset)
+        # The mutable plane over this frozen version: appended rows +
+        # tombstones, scanned by every batch launch alongside the structures.
+        self.delta = delta_mod.MutableDelta(dataset)
 
         # -- the access-path registry (build-from-spec) --------------------
         # Every built structure registers as a plannable path, or "auto"
@@ -134,23 +150,23 @@ class MDRQEngine:
         # ``method="scan_vertical"`` remains an opt-in.
         self.paths: dict[str, paths_mod.AccessPath] = {}
         if self.dist is not None:
-            self.register_path(paths_mod.DistributedScanPath(self.dist))
-            self.register_path(
+            self.add_path(paths_mod.DistributedScanPath(self.dist))
+            self.add_path(
                 paths_mod.VerticalScanPath(lambda: self.columnar,
                                            plannable=False))
         else:
-            self.register_path(paths_mod.ColumnarScanPath(self._columnar))
-            self.register_path(paths_mod.VerticalScanPath(lambda: self.columnar))
+            self.add_path(paths_mod.ColumnarScanPath(self._columnar))
+            self.add_path(paths_mod.VerticalScanPath(lambda: self.columnar))
         if self.rowscan is not None:
             # no fused batch kernel for the row layout — per-query fallback;
             # host columns enable the reduced specs' from_ids finalization
-            self.register_path(paths_mod.PerQueryPath("rowscan", self.rowscan,
-                                                      cols=dataset.cols))
+            self.add_path(paths_mod.PerQueryPath("rowscan", self.rowscan,
+                                                 cols=dataset.cols))
         for index in (self.kdtree, self.rstar):
             if index is not None:
-                self.register_path(paths_mod.BlockedIndexPath(index))
+                self.add_path(paths_mod.BlockedIndexPath(index))
         if self.vafile is not None:
-            self.register_path(paths_mod.VAFilePath(self.vafile, self.hist))
+            self.add_path(paths_mod.VAFilePath(self.vafile, self.hist))
 
         # The planner shares the registry dict: paths registered later are
         # planned without rebuilding anything.
@@ -160,9 +176,6 @@ class MDRQEngine:
                                             if self.dist is not None else 1)),
             paths=self.paths,
         )
-        self.last_stats: Optional[QueryStats] = None
-        self.last_batch_stats: Optional[BatchStats] = None
-        self.last_trace: Optional[obs_tracing.BatchTrace] = None
 
     @property
     def columnar(self) -> scan_mod.ColumnarScan:
@@ -171,14 +184,7 @@ class MDRQEngine:
                                                           tile_n=self.tile_n)
         return self._columnar
 
-    # -- the registry ------------------------------------------------------
-    def register_path(self, path: paths_mod.AccessPath) -> None:
-        """Register (or replace) an access path under ``path.name``.
-
-        The planner sees it immediately (shared registry dict): a plannable
-        path is costed by ``explain``/``plan_batch`` and can win "auto"
-        queries; any registered path is addressable as ``method=name``.
-        """
+    def add_path(self, path: paths_mod.AccessPath) -> None:
         for attr in ("name", "plannable", "owns_storage", "nbytes_index",
                      "query", "count", "query_batch", "cost", "cost_batch"):
             if not hasattr(path, attr):
@@ -186,34 +192,175 @@ class MDRQEngine:
                                 f"(see core.paths.AccessPath)")
         self.paths[path.name] = path
 
+
+class MDRQEngine:
+    """Build-once, query-many MDRQ engine (analytical workloads, §1) — now
+    with a mutable plane: ``append``/``delete`` land in a versioned delta
+    segment and ``compact`` folds it back into freshly built structures."""
+
+    def __init__(
+        self,
+        dataset: T.Dataset,
+        structures: tuple[str, ...] = ("scan", "kdtree", "rstar", "vafile"),
+        tile_n: int = 1024,
+        rowscan: bool = False,
+        mesh=None,
+    ):
+        # Build parameters persist so ``compact`` can rebuild the same
+        # structure set over the merged dataset.
+        self._structures = tuple(structures)
+        self.tile_n = tile_n
+        self._rowscan_enabled = bool(rowscan)
+        self._mesh = mesh
+        # Serializes the write side (append/delete/compact-commit); the read
+        # side is lock-free — queries capture ``self._state`` once.
+        self._ingest_lock = threading.Lock()
+        self._state = self._build_state(dataset, version=0)
+        self.last_stats: Optional[QueryStats] = None
+        self.last_batch_stats: Optional[BatchStats] = None
+        self.last_trace: Optional[obs_tracing.BatchTrace] = None
+
+    def _build_state(self, dataset: T.Dataset, version: int = 0) -> _EngineState:
+        return _EngineState(dataset, self._structures, self.tile_n,
+                            self._rowscan_enabled, self._mesh, version=version)
+
+    # -- versioned-state views ---------------------------------------------
+    # Pre-versioning callers read these as plain attributes; each delegates
+    # to the *current* version. Code that must be swap-consistent (query,
+    # query_batch, the Compactor) captures ``self._state`` once instead.
+    @property
+    def dataset(self) -> T.Dataset:
+        return self._state.dataset
+
+    @property
+    def dist(self):
+        return self._state.dist
+
+    @property
+    def rowscan(self):
+        return self._state.rowscan
+
+    @property
+    def kdtree(self):
+        return self._state.kdtree
+
+    @property
+    def rstar(self):
+        return self._state.rstar
+
+    @property
+    def vafile(self):
+        return self._state.vafile
+
+    @property
+    def hist(self) -> Histograms:
+        return self._state.hist
+
+    @property
+    def paths(self) -> dict[str, paths_mod.AccessPath]:
+        return self._state.paths
+
+    @property
+    def planner(self) -> Planner:
+        return self._state.planner
+
+    @property
+    def columnar(self) -> scan_mod.ColumnarScan:
+        return self._state.columnar
+
+    @property
+    def _columnar(self):
+        # introspection compat: None until the lazy columnar copy is built
+        return self._state._columnar
+
+    @property
+    def delta(self) -> delta_mod.MutableDelta:
+        return self._state.delta
+
+    @property
+    def version(self) -> int:
+        """Monotone dataset version: bumps on every compaction swap."""
+        return self._state.version
+
+    # -- the mutable plane (append / delete / compact) ----------------------
+    def append(self, rows) -> np.ndarray:
+        """Append rows ((k, m) array-like) -> their assigned int64 ids.
+
+        Rows land in the current version's delta segment and are visible to
+        every subsequent query: the fused batch launches scan the delta
+        block alongside the frozen structures (same launch, same host sync).
+        """
+        with self._ingest_lock:
+            return self._state.delta.append(rows)
+
+    def delete(self, ids) -> int:
+        """Tombstone ids (base or delta rows) -> count of newly deleted."""
+        with self._ingest_lock:
+            return self._state.delta.delete(ids)
+
+    def compact(self) -> np.ndarray:
+        """Merge delta rows + tombstones into freshly built main structures
+        and atomically swap the engine to the new version.
+
+        Returns the id map (old id -> new id, -1 for deleted rows). The
+        build runs outside the ingest lock — serving and ingest continue on
+        the old version — and the commit re-folds anything ingested during
+        the build into the new version's delta before swapping ``_state`` in
+        a single assignment.
+        """
+        with obs_tracing.span("compact", version=self._state.version):
+            comp = delta_mod.Compactor(self)
+            comp.build()
+            return comp.commit()
+
+    # -- the registry ------------------------------------------------------
+    def register_path(self, path: paths_mod.AccessPath) -> None:
+        """Register (or replace) an access path under ``path.name``.
+
+        The planner sees it immediately (shared registry dict): a plannable
+        path is costed by ``explain``/``plan_batch`` and can win "auto"
+        queries; any registered path is addressable as ``method=name``.
+        Registration binds to the *current* version — a later ``compact``
+        rebuilds the registry from the engine's build spec, so external
+        paths must re-register after a swap.
+        """
+        self._state.add_path(path)
+
     def _path(self, method: str) -> paths_mod.AccessPath:
-        path = self.paths.get(method)
-        if path is None:
-            raise ValueError(f"unknown method {method!r}; "
-                             f"options: {tuple(self.paths)} or 'auto'")
-        return path
+        return _lookup_path(self._state.paths, method)
 
     def memory_report(self) -> dict[str, int]:
-        """Bytes of auxiliary structures per path (paper §7.2 comparison).
+        """Bytes of auxiliary structures per path (paper §7.2 comparison),
+        plus the mutable plane ("delta": segment rows + both tombstone sets).
 
         Storage-owning paths only: views over another path's arrays (the
         vertical scan) would double-count.
         """
-        rep = {"data": self.dataset.nbytes}
-        for name, path in self.paths.items():
+        state = self._state
+        rep = {"data": state.dataset.nbytes, "delta": state.delta.nbytes}
+        for name, path in state.paths.items():
             if path.owns_storage:
                 rep[name] = path.nbytes_index
         return rep
 
     @staticmethod
-    def _path_query_batch(path, sub: T.QueryBatch, spec: T.ResultSpec) -> list:
-        """Run one bucket through a path under ``spec``.
+    def _path_query_batch(path, sub: T.QueryBatch, spec: T.ResultSpec,
+                          delta=None) -> list:
+        """Run one bucket through a path under ``spec`` (and ``delta``).
 
         Paths registered against the pre-ResultSpec protocol (a
         ``query_batch(batch, mode)`` taking mode strings) still serve the
         two legacy shapes; reduced shapes on such a path get the canonical
-        error instead of silently wrong results.
+        error instead of silently wrong results. A non-empty delta likewise
+        only goes to paths that declare the parameter — anything else would
+        silently drop appended rows.
         """
+        if delta is not None:
+            if not paths_mod.takes_delta(path.query_batch):
+                raise ValueError(
+                    f"access path {path.name!r} is not delta-aware; "
+                    f"call compact() first")
+            return path.query_batch(sub, spec=spec, delta=delta)
         if paths_mod.takes_spec(path.query_batch):
             return path.query_batch(sub, spec=spec)
         if spec.kind in T.RESULT_MODES:
@@ -231,17 +378,26 @@ class MDRQEngine:
         an int count, a bool mask, top-k ids, or an aggregate; records
         QueryStats. ``mode="ids"|"count"`` is the deprecated string alias.
         """
-        if q.m != self.dataset.m:
-            raise ValueError(f"query dims {q.m} != dataset dims {self.dataset.m}")
-        spec = T.resolve_spec(spec, mode).validate(self.dataset.m)
+        state = self._state
+        if q.m != state.dataset.m:
+            raise ValueError(f"query dims {q.m} != dataset dims {state.dataset.m}")
+        spec = T.resolve_spec(spec, mode).validate(state.dataset.m)
+        dview = state.delta.snapshot()
+        state.planner.model.delta_n = dview.d
         if method == "auto":
-            plan = self.planner.explain(q, spec=spec)
+            plan = state.planner.explain(q, spec=spec)
             method, est = plan.method, plan.est_selectivity
         else:
-            est = self.planner.hist.selectivity(q)
-        path = self._path(method)
+            est = state.planner.hist.selectivity(q)
+        path = _lookup_path(state.paths, method)
         t0 = time.perf_counter()
-        if spec.kind == "ids":      # dedicated single-query fast paths for
+        if not dview.is_empty:
+            # Singles see only the frozen base — with a live delta every
+            # spec (ids and count included) rides the delta-aware batch
+            # rung at Q=1.
+            res = self._path_query_batch(
+                path, T.QueryBatch.from_queries([q]), spec, delta=dview)[0]
+        elif spec.kind == "ids":    # dedicated single-query fast paths for
             res = path.query(q)     # the two historical shapes; every other
         elif spec.kind == "count":  # spec rides the batch rung at Q=1
             res = path.count(q)
@@ -281,6 +437,7 @@ class MDRQEngine:
         ``trace=False`` the span calls short-circuit to ``obs.NULL_SPAN`` —
         nothing is allocated on the hot path.
         """
+        state = self._state
         spec = T.resolve_spec(spec, mode)
         if isinstance(queries, T.QueryBatch):
             batch = queries
@@ -290,9 +447,13 @@ class MDRQEngine:
         if batch is None or len(batch) == 0:
             self.last_batch_stats = BatchStats(0, 0.0, {}, 0, methods=[])
             return []
-        if batch.m != self.dataset.m:
-            raise ValueError(f"batch dims {batch.m} != dataset dims {self.dataset.m}")
-        spec.validate(self.dataset.m)
+        if batch.m != state.dataset.m:
+            raise ValueError(f"batch dims {batch.m} != dataset dims {state.dataset.m}")
+        spec.validate(state.dataset.m)
+        # One snapshot serves the whole batch: concurrent appends/deletes
+        # become visible at the next batch, never mid-batch.
+        dview = state.delta.snapshot()
+        delta_arg = None if dview.is_empty else dview
 
         tracer = obs_tracing.Tracer() if trace else None
         if tracer is not None:
@@ -301,11 +462,16 @@ class MDRQEngine:
         try:
             t0 = time.perf_counter()
             with obs_tracing.span("plan", n_queries=len(batch)):
+                # The delta's size is a per-version cost axis: every path
+                # pays an extra delta scan per batch, amortized over its
+                # realized bucket — which can flip index picks to the scan
+                # as the delta grows.
+                state.planner.model.delta_n = dview.d
                 if method == "auto":
-                    bp = self.planner.plan_batch(batch, spec=spec)
+                    bp = state.planner.plan_batch(batch, spec=spec)
                     methods = bp.methods
                 else:
-                    self._path(method)  # raises on unknown names before work
+                    _lookup_path(state.paths, method)  # raise before work
                     methods = [method] * len(batch)
             plan_dt = time.perf_counter() - t0
 
@@ -318,7 +484,9 @@ class MDRQEngine:
                 sub = T.QueryBatch(batch.lower[idxs], batch.upper[idxs])
                 with obs_tracing.span("execute", path=meth,
                                       bucket=len(idxs)) as sp:
-                    out = self._path_query_batch(self._path(meth), sub, spec)
+                    out = self._path_query_batch(
+                        _lookup_path(state.paths, meth), sub, spec,
+                        delta=delta_arg)
                     sp.block_on(out)
                 for k, res in zip(idxs, out):
                     results[k] = res
@@ -345,22 +513,23 @@ class MDRQEngine:
         )
         if tracer is not None:
             self.last_trace = self._build_trace(
-                tracer, batch, spec, bp, methods, buckets, results,
+                state, tracer, batch, spec, bp, methods, buckets, results,
                 plan_dt, dt)
         return results
 
-    def _build_trace(self, tracer, batch, spec, bp, methods, buckets,
+    @staticmethod
+    def _build_trace(state, tracer, batch, spec, bp, methods, buckets,
                      results, plan_dt, dt) -> obs_tracing.BatchTrace:
         """Assemble per-query ``QueryTrace`` records from the span tree and
         the batch plan (estimates come from ``bp`` when the planner chose;
         explicit-method runs get histogram selectivities and NaN cost)."""
-        n = self.dataset.n
+        n = state.dataset.n
         mq = batch.dims_mask.sum(axis=1)
         if bp is not None:
             sels = bp.est_selectivity
             path_row = {name: j for j, name in enumerate(bp.path_names)}
         else:
-            sels = self.planner.plan_inputs(batch).sels
+            sels = state.planner.plan_inputs(batch).sels
             path_row = {}
         # one execute span per bucket, keyed by its path attr
         bucket_spans = {s.attrs.get("path"): s for s in tracer.find("execute")}

@@ -76,6 +76,28 @@ def takes_spec(method) -> bool:
     """
     return _fn_takes_spec(getattr(method, "__func__", method))
 
+
+@functools.lru_cache(maxsize=None)
+def _fn_takes_delta(fn) -> bool:
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # builtins / C callables
+        return False
+    return "delta" in params or any(p.kind == p.VAR_KEYWORD
+                                    for p in params.values())
+
+
+def takes_delta(method) -> bool:
+    """Whether a path's ``query_batch`` accepts the ``delta`` argument of the
+    versioned-dataset protocol (a ``core.delta.DeltaView``).
+
+    The engine only hands a non-empty delta to paths that declare the
+    parameter; registered paths that predate the mutable plane raise a
+    "compact() first" error instead of silently serving stale results. Cached
+    like ``takes_spec``.
+    """
+    return _fn_takes_delta(getattr(method, "__func__", method))
+
 # Per-query results under some ResultSpec: id arrays (Ids/TopK), ints
 # (Count), bool masks (Mask), or floats (Agg).
 Results = Union["list[np.ndarray]", "list[int]", "list[float]"]
@@ -228,9 +250,9 @@ class ColumnarScanPath(ScanCost):
         return self._scan.count(q)
 
     def query_batch(self, batch: T.QueryBatch,
-                    spec: T.ResultSpec = T.IDS) -> Results:
+                    spec: T.ResultSpec = T.IDS, delta=None) -> Results:
         with _path_span(self, batch, spec) as sp:
-            out = self._scan.query_batch(batch, spec=spec)
+            out = self._scan.query_batch(batch, spec=spec, delta=delta)
             sp.block_on(out)
         return out
 
@@ -257,9 +279,9 @@ class DistributedScanPath(ScanCost):
         return self._dist.count(q)
 
     def query_batch(self, batch: T.QueryBatch,
-                    spec: T.ResultSpec = T.IDS) -> Results:
+                    spec: T.ResultSpec = T.IDS, delta=None) -> Results:
         with _path_span(self, batch, spec) as sp:
-            out = self._dist.query_batch(batch, spec=spec)
+            out = self._dist.query_batch(batch, spec=spec, delta=delta)
             sp.block_on(out)
         return out
 
@@ -291,9 +313,10 @@ class VerticalScanPath(VerticalScanCost):
         return self._scan_ref().count_partial(q)
 
     def query_batch(self, batch: T.QueryBatch,
-                    spec: T.ResultSpec = T.IDS) -> Results:
+                    spec: T.ResultSpec = T.IDS, delta=None) -> Results:
         with _path_span(self, batch, spec) as sp:
-            out = self._scan_ref().query_batch(batch, partial=True, spec=spec)
+            out = self._scan_ref().query_batch(batch, partial=True, spec=spec,
+                                               delta=delta)
             sp.block_on(out)
         return out
 
@@ -319,9 +342,9 @@ class BlockedIndexPath(TreeCost):
         return self._index.count(q)
 
     def query_batch(self, batch: T.QueryBatch,
-                    spec: T.ResultSpec = T.IDS) -> Results:
+                    spec: T.ResultSpec = T.IDS, delta=None) -> Results:
         with _path_span(self, batch, spec) as sp:
-            out = self._index.query_batch(batch, spec=spec)
+            out = self._index.query_batch(batch, spec=spec, delta=delta)
             sp.block_on(out)
         return out
 
@@ -348,9 +371,9 @@ class VAFilePath(VAFileCost):
         return self._vafile.count(q)
 
     def query_batch(self, batch: T.QueryBatch,
-                    spec: T.ResultSpec = T.IDS) -> Results:
+                    spec: T.ResultSpec = T.IDS, delta=None) -> Results:
         with _path_span(self, batch, spec) as sp:
-            out = self._vafile.query_batch(batch, spec=spec)
+            out = self._vafile.query_batch(batch, spec=spec, delta=delta)
             sp.block_on(out)
         return out
 
@@ -390,9 +413,11 @@ class PerQueryPath:
         return self._impl.count(q)
 
     def query_batch(self, batch: T.QueryBatch,
-                    spec: T.ResultSpec = T.IDS) -> Results:
+                    spec: T.ResultSpec = T.IDS, delta=None) -> Results:
         spec = T.validate_mode(spec)
         with _path_span(self, batch, spec):
+            if delta is not None and not delta.is_empty:
+                return self._query_batch_delta(batch, spec, delta)
             if spec.kind == "ids":
                 return [self.query(batch[k]) for k in range(len(batch))]
             if spec.kind == "count":
@@ -404,6 +429,24 @@ class PerQueryPath:
                     f"{spec.kind!r}; construct PerQueryPath(..., cols=...)")
             return [spec.from_ids(self.query(batch[k]), self._cols)
                     for k in range(len(batch))]
+
+    def _query_batch_delta(self, batch: T.QueryBatch, spec: T.ResultSpec,
+                           delta) -> Results:
+        # Host-side delta merge: the wrapped singles see only the frozen
+        # base, so per query drop base tombstones, append the delta's host
+        # match, and re-finalize every spec from ids against the combined
+        # columns (this rung already pays Q host round trips — one numpy
+        # filter more does not change its cost class).
+        cols = delta.combined_cols()
+        out = []
+        for k in range(len(batch)):
+            q = batch[k]
+            ids = np.asarray(self.query(q), np.int64)
+            if delta.has_base_tombs:
+                ids = ids[~delta.base_tomb[ids]]
+            ids = np.concatenate([ids, delta.match_delta_ids(q)])
+            out.append(ids if spec.kind == "ids" else spec.from_ids(ids, cols))
+        return out
 
     # A plannable=False path is never priced; keep the protocol total anyway.
     def cost(self, q: T.RangeQuery, sel: float, batch: int, model,

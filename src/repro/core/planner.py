@@ -202,11 +202,38 @@ class CostModel:
     # where Ids/Mask read back the whole (or visited-fraction of the) mask —
     # this term is what makes ``plan_batch`` spec-dependent.
     sec_per_result_byte: float = 1.0 / 16e9
+    # Live delta-segment rows layered over the frozen structures (DESIGN.md
+    # §11). Every path's batch launch additionally scans the delta block, so
+    # every cost picks up the same per-*launch* delta term — amortized over
+    # the path's realized bucket. That amortization is what flips plans as
+    # the delta grows: a minority-bucket index pick pays the delta scan over
+    # a few queries where the big scan bucket splits it Q ways. The engine
+    # refreshes this from the delta snapshot before each plan.
+    delta_n: int = 0
 
     def _bytes_cost(self, nbytes: float, dispatches: float = 1.0,
                     batch: int = 1) -> float:
         return (nbytes * self.sec_per_byte
                 + dispatches * self.dispatch_overhead / max(batch, 1))
+
+    # -- delta-segment term (shared by every path cost) --------------------
+    def _delta_cost(self, batch: int = 1) -> float:
+        """Per-query seconds for the delta-block scan a batch launch folds
+        in: streamed bytes amortize over the fused batch, the per-query
+        compare floor does not (same shape as ``_scan_cost``)."""
+        if self.delta_n <= 0:
+            return 0.0
+        elems = float(self.delta_n) * self.m
+        stream = elems * self.bytes_per_val * self.sec_per_byte / max(batch, 1)
+        return max(stream, elems * self.sec_per_cmp)
+
+    def _delta_cost_batch(self, bucket: np.ndarray) -> np.ndarray:
+        b = np.maximum(np.asarray(bucket, np.float64), 1.0)
+        if self.delta_n <= 0:
+            return np.zeros_like(b)
+        elems = float(self.delta_n) * self.m
+        stream = elems * self.bytes_per_val * self.sec_per_byte / b
+        return np.maximum(stream, elems * self.sec_per_cmp)
 
     def spec_host_cost(self, spec, touched):
         """Result-payload seconds for ``spec`` on a path whose identity
@@ -266,6 +293,7 @@ class CostModel:
     def cost_scan(self, q: T.RangeQuery, batch: int = 1,
                   n_devices: int | None = None, spec=None) -> float:
         return self._scan_cost(self.n * self.m, batch, n_devices) \
+            + self._delta_cost(batch) \
             + self.spec_host_cost(spec, float(self.n))
 
     def cost_scan_vertical(self, q: T.RangeQuery, batch: int = 1,
@@ -277,6 +305,7 @@ class CostModel:
         mq = max(q.n_queried_dims, 1)
         return self._scan_cost(self.n * mq, batch,
                                n_devices if n_devices is not None else 1) \
+            + self._delta_cost(batch) \
             + self.spec_host_cost(spec, float(self.n))
 
     def cost_tree(self, q: T.RangeQuery, sel: float, batch: int = 1,
@@ -289,6 +318,7 @@ class CostModel:
         refine = f * self.n * self.m * self.bytes_per_val / self.visit_bw_discount
         return self._bytes_cost(prune + refine, dispatches=2.0, batch=batch) \
             + self.host_sync_overhead / max(batch, 1) \
+            + self._delta_cost(batch) \
             + self.spec_host_cost(spec, f * self.n)
 
     def cost_vafile(self, q: T.RangeQuery, hist: Histograms, batch: int = 1,
@@ -310,6 +340,7 @@ class CostModel:
         return approx + refine * self.sec_per_byte \
             + 2.0 * self.dispatch_overhead / max(batch, 1) \
             + self.host_sync_overhead / max(batch, 1) \
+            + self._delta_cost(batch) \
             + self.spec_host_cost(spec, blk_frac * self.n)
 
     def modeled_bytes(self, method: str, sel: float, mq: int, bucket: int
@@ -328,20 +359,22 @@ class CostModel:
         b = max(int(bucket), 1)
         mq = max(int(mq), 1)
         sel = min(max(float(sel), 1.0 / max(self.n, 1)), 1.0)
+        # every batch launch also streams the delta block, bucket-amortized
+        dbytes = self.delta_n * self.m * self.bytes_per_val / b
         if method == "scan":
             return self.n * self.m * self.bytes_per_val \
-                / (b * max(self.n_devices, 1))
+                / (b * max(self.n_devices, 1)) + dbytes
         if method == "scan_vertical":
-            return self.n * mq * self.bytes_per_val / b
+            return self.n * mq * self.bytes_per_val / b + dbytes
         if method == "rowscan":
-            return float(self.n * self.m * self.bytes_per_val)
+            return float(self.n * self.m * self.bytes_per_val) + dbytes
         if method in ("kdtree", "rstar"):
             n_leaves = -(-self.n // self.tile_n)
             prune = 2 * n_leaves * self.m * self.bytes_per_val / b
             side = sel ** (1.0 / mq)
             f = min(1.0, (side + self.leaf_side()) ** mq)
             return prune + f * self.n * self.m * self.bytes_per_val \
-                / self.visit_bw_discount
+                / self.visit_bw_discount + dbytes
         if method == "vafile":
             words = -(-self.m // VA_DIMS_PER_WORD)
             # per-dim slack approximated from the whole-query selectivity
@@ -350,7 +383,7 @@ class CostModel:
             blk_frac = 1.0 - (1.0 - cand) ** self.tile_n
             return self.n * words * 4 / b \
                 + blk_frac * self.n * self.m * self.bytes_per_val \
-                / self.visit_bw_discount
+                / self.visit_bw_discount + dbytes
         return None
 
     # -- vectorized per-path costs (batch planning) ------------------------
@@ -375,6 +408,7 @@ class CostModel:
         """(Q,) full fused-scan costs (query-independent except amortization)."""
         elems = np.full((n_queries,), float(self.n) * self.m)
         return self._scan_cost_batch(elems, bucket, n_devices) \
+            + self._delta_cost_batch(bucket) \
             + self.spec_host_cost(spec, np.full((n_queries,), float(self.n)))
 
     def cost_scan_vertical_batch(self, mq: np.ndarray, bucket: np.ndarray,
@@ -390,6 +424,7 @@ class CostModel:
         touched = np.full((np.asarray(mq).shape[0],), float(self.n))
         return self._scan_cost_batch(
             elems, bucket, n_devices if n_devices is not None else 1) \
+            + self._delta_cost_batch(bucket) \
             + self.spec_host_cost(spec, touched)
 
     def cost_tree_batch(self, sels: np.ndarray, mq: np.ndarray,
@@ -405,6 +440,7 @@ class CostModel:
         return (prune + refine) * self.sec_per_byte \
             + 2.0 * self.dispatch_overhead / b \
             + self.host_sync_overhead / b \
+            + self._delta_cost_batch(bucket) \
             + self.spec_host_cost(spec, f * self.n)
 
     def cost_vafile_batch(self, dim_sels: np.ndarray, dims_mask: np.ndarray,
@@ -426,6 +462,7 @@ class CostModel:
         return approx + refine * self.sec_per_byte \
             + 2.0 * self.dispatch_overhead / b \
             + self.host_sync_overhead / b \
+            + self._delta_cost_batch(bucket) \
             + self.spec_host_cost(spec, blk_frac * self.n)
 
 

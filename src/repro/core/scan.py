@@ -140,24 +140,39 @@ class ColumnarScan:
         return [int(c) for c in counts]
 
     def query_batch(self, batch: T.QueryBatch, partial: bool = False,
-                    spec: T.ResultSpec = T.IDS) -> list:
+                    spec: T.ResultSpec = T.IDS, delta=None) -> list:
         """Batched execution under any ResultSpec: the fused multi-query
         kernel and the spec's on-device reducer run as one launch, the
         payload crosses in one host sync, and the spec's host finalizer
         types the per-query results (ids / counts / masks / top-k ids /
-        aggregates)."""
+        aggregates).
+
+        ``delta`` (a ``core.delta.DeltaView``) folds the mutable data plane
+        into the same launch: base tombstones AND into the masks on device,
+        the delta block scans with the same bounds, and the spec merges the
+        two finalized halves — still one launch + one host sync.
+        """
         spec = T.validate_mode(spec).validate(self.m)
         q_pad, lo, up = bucketed_batch_bounds(batch, self.data_dev.shape[0],
                                               self.data_dev.dtype)
+        dcm = tomb = None
+        if delta is not None and not delta.is_empty:
+            dcm = delta.device_cm(self.tile_n)
+            tomb = delta.base_tomb_dev(self.data_dev.shape[1])
         if partial:
             dim_ids = batch.padded_dim_ids(q_pad)
             payload = ops.multi_scan_vertical_reduce(
-                self.data_dev, jnp.asarray(dim_ids), lo, up, spec=spec,
-                tile_n=self.tile_n)
+                self.data_dev, jnp.asarray(dim_ids), lo, up, dcm, tomb,
+                spec=spec, tile_n=self.tile_n)
         else:
-            payload = ops.multi_scan_reduce(self.data_dev, lo, up, spec=spec,
-                                            tile_n=self.tile_n)
-        return spec.finalize(ops.device_get(payload), len(batch), self.n)
+            payload = ops.multi_scan_reduce(self.data_dev, lo, up, dcm, tomb,
+                                            spec=spec, tile_n=self.tile_n)
+        if dcm is None:
+            return spec.finalize(ops.device_get(payload), len(batch), self.n)
+        base_host, delta_host = ops.device_get(payload)
+        base = spec.finalize(base_host, len(batch), self.n)
+        dres = spec.finalize(delta_host, len(batch), delta.d)
+        return spec.merge_delta(base, dres, delta.host_ctx())
 
 
 def build_columnar_scan(dataset: T.Dataset, tile_n: int = 1024) -> ColumnarScan:

@@ -172,8 +172,8 @@ class VAFile:
         qids, bids = np.nonzero(surv)
         return qids.astype(np.int32), bids.astype(np.int32)
 
-    def query_batch(self, batch: T.QueryBatch, spec: T.ResultSpec = T.IDS
-                    ) -> list:
+    def query_batch(self, batch: T.QueryBatch, spec: T.ResultSpec = T.IDS,
+                    delta=None) -> list:
         """Batched two-phase query: both phases fused, one launch each.
 
         Phase 1 is a single ``multi_va_filter`` launch for the whole batch
@@ -192,7 +192,7 @@ class VAFile:
         self.last_visited_blocks = int(qids.size)
         return reduce_visits_batch(
             self.data_dev, qids, bids, batch, self.tile_n, q_n, spec,
-            self.n, perm=None,
+            self.n, perm=None, delta=delta,
         )
 
 

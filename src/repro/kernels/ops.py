@@ -448,12 +448,42 @@ multi_va_filter = _counted(
 # launch and, with the single ``device_get`` of the payload, one host sync
 # per batch. The identity specs (Ids/Mask) flow through unchanged: their
 # "payload" is the mask itself.
+#
+# Mutable data plane (DESIGN.md §11): each op takes two optional extras that
+# ride in the SAME jit, so a non-empty delta costs zero additional launches —
+#   * ``base_tomb`` — (n_pad,) int8 tombstone flags in the data's storage
+#     order, ANDed into the base match masks before the reducer sees them;
+#   * ``delta_cm``  — the delta segment as a (m_pad, d_pad) columnar block
+#     (same padding contract as ``data_cm``; tombstoned delta rows are +inf
+#     poisoned at build time). When present the op scans it with the same
+#     bounds, reduces it with the same spec, and returns a (base_payload,
+#     delta_payload) pair — one ``device_get`` of the pair is still one host
+#     sync, and the spec's ``merge_delta`` folds the halves on the host.
+
+
+def _multi_scan_masks(data_cm, lower, upper, *, tile_n, interpret):
+    """Backend-dispatched fused multi-query mask kernel (trace-time helper)."""
+    if use_xla():
+        return _ref.multi_scan_ref(data_cm, lower, upper)
+    return _ms.multi_scan_tiles(data_cm, lower, upper, tile_n=tile_n,
+                                interpret=interpret)
+
+
+def _delta_payload(delta_cm, lower, upper, *, spec, tile_n, interpret):
+    """Scan + reduce the delta block with the batch's bounds (same jit)."""
+    dmask = _multi_scan_masks(delta_cm, lower, upper, tile_n=tile_n,
+                              interpret=interpret)
+    return spec.device_reduce(dmask, delta_cm, tile_n=tile_n,
+                              interpret=interpret)
+
 
 @functools.partial(jax.jit, static_argnames=("spec", "tile_n", "interpret"))
 def _multi_scan_reduce_jit(
     data_cm: jax.Array,
     lower: jax.Array,
     upper: jax.Array,
+    delta_cm: jax.Array | None = None,
+    base_tomb: jax.Array | None = None,
     *,
     spec,
     tile_n: int = _rs.DEFAULT_TILE_N,
@@ -461,13 +491,17 @@ def _multi_scan_reduce_jit(
 ):
     if interpret is None:
         interpret = default_interpret()
-    if use_xla():
-        mask = _ref.multi_scan_ref(data_cm, lower, upper)
-    else:
-        mask = _ms.multi_scan_tiles(data_cm, lower, upper, tile_n=tile_n,
-                                    interpret=interpret)
-    return spec.device_reduce(mask, data_cm, tile_n=tile_n,
+    mask = _multi_scan_masks(data_cm, lower, upper, tile_n=tile_n,
+                             interpret=interpret)
+    if base_tomb is not None:
+        from repro.kernels import reducers as _red
+        mask = _red.fold_tombstones(mask, base_tomb)
+    base = spec.device_reduce(mask, data_cm, tile_n=tile_n,
                               interpret=interpret)
+    if delta_cm is None:
+        return base
+    return base, _delta_payload(delta_cm, lower, upper, spec=spec,
+                                tile_n=tile_n, interpret=interpret)
 
 
 multi_scan_reduce = _counted(
@@ -484,6 +518,8 @@ def _multi_scan_vertical_reduce_jit(
     dim_ids: jax.Array,
     lower: jax.Array,
     upper: jax.Array,
+    delta_cm: jax.Array | None = None,
+    base_tomb: jax.Array | None = None,
     *,
     spec,
     tile_n: int = _rs.DEFAULT_TILE_N,
@@ -496,8 +532,17 @@ def _multi_scan_vertical_reduce_jit(
     else:
         mask = _ms.multi_scan_vertical(data_cm, dim_ids, lower, upper,
                                        tile_n=tile_n, interpret=interpret)
-    return spec.device_reduce(mask, data_cm, tile_n=tile_n,
+    if base_tomb is not None:
+        from repro.kernels import reducers as _red
+        mask = _red.fold_tombstones(mask, base_tomb)
+    base = spec.device_reduce(mask, data_cm, tile_n=tile_n,
                               interpret=interpret)
+    if delta_cm is None:
+        return base
+    # The delta is tiny: a full multi-scan over it is exact (unconstrained
+    # dims carry match-all bounds) and avoids a second vertical variant.
+    return base, _delta_payload(delta_cm, lower, upper, spec=spec,
+                                tile_n=tile_n, interpret=interpret)
 
 
 multi_scan_vertical_reduce = _counted(
@@ -516,6 +561,8 @@ def _multi_visit_reduce_jit(
     visit_index: jax.Array,
     lower: jax.Array,
     upper: jax.Array,
+    delta_cm: jax.Array | None = None,
+    base_tomb: jax.Array | None = None,
     *,
     spec,
     tile_n: int = _rs.DEFAULT_TILE_N,
@@ -532,9 +579,19 @@ def _multi_visit_reduce_jit(
     else:
         masks = _ms.multi_scan_visit(data_cm, query_ids, block_ids, lower,
                                      upper, tile_n=tile_n, interpret=interpret)
-    return spec.reduce_visits(masks, data_cm, query_ids, block_ids, valid,
+    if base_tomb is not None:
+        from repro.kernels import reducers as _red
+        masks = _red.fold_tombstones(
+            masks, _red.gather_tomb_blocks(base_tomb, block_ids, tile_n))
+    base = spec.reduce_visits(masks, data_cm, query_ids, block_ids, valid,
                               visit_index, tile_n=tile_n,
                               n_queries=n_queries, interpret=interpret)
+    if delta_cm is None:
+        return base
+    # The (m_pad, q_pad) bounds already cover the whole batch, so the delta
+    # scans once for every query regardless of which blocks it visited.
+    return base, _delta_payload(delta_cm, lower, upper, spec=spec,
+                                tile_n=tile_n, interpret=interpret)
 
 
 multi_visit_reduce = _counted(

@@ -190,6 +190,26 @@ def masked_agg(masks, values, op: str, *, tile_n: int, interpret: bool):
     return agg, counts
 
 
+# -- tombstone folds (mutable data plane, DESIGN.md §11) ----------------------
+
+def fold_tombstones(masks, tomb):
+    """AND tombstone flags into match masks: a tombstoned object never matches.
+
+    ``tomb`` is int8 (1 = dead) and broadcasts against ``masks`` — (n_pad,)
+    against the (Q, n_pad) scan masks, or a pre-gathered (V, tile_n) block
+    against the visit masks. Runs inside the fused reduce jits, before the
+    spec's reducer, so every payload shape (counts, top-k, aggregates) sees
+    tombstones folded at zero extra launches.
+    """
+    return masks * (tomb == 0).astype(masks.dtype)
+
+
+def gather_tomb_blocks(tomb, bids, tile_n: int):
+    """(V, tile_n) tombstone flags of the visited blocks (padding visits ->
+    block 0; harmless — downstream reducers mask them via ``valid``)."""
+    return tomb.reshape(-1, tile_n)[jnp.maximum(bids, 0)]
+
+
 # -- visit-shaped reducers (two-phase paths; plain jnp segment reductions) ----
 
 def gather_visit_values(data_cm, dim: int, bids, tile_n: int):

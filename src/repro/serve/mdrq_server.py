@@ -34,6 +34,15 @@ deadline-triggered idle-stream flushes are distinguishable from
 size-triggered ones after the fact. Per-query queue latency
 (submit -> flush start) and execute latency land in per-spec-kind
 histograms; ``ServerStats.latency_percentiles(kind)`` reports p50/p95/p99.
+
+Serve-while-ingest: ``append`` / ``delete`` / ``compact`` ride the same
+admission loop. Each write drains the pending window first (a flush tagged
+``reason="ingest"``), then lands in the engine's delta segment — so request
+order determines visibility deterministically, queries keep flushing as one
+fused launch per batch, and a ``compact`` swaps the engine's version without
+the server holding any lock. Ingest traffic is visible in
+``ServerStats.ingest_counts``, ``mdrq_ingest_total{op=...}``, and as
+``spec_kind="ingest"`` query-log entries.
 """
 from __future__ import annotations
 
@@ -86,8 +95,10 @@ class ServerStats:
     method_counts: dict[str, int] = dataclasses.field(default_factory=dict)
     # served queries bucketed by result-spec kind ("ids", "count", "topk", ...)
     spec_counts: dict[str, int] = dataclasses.field(default_factory=dict)
-    # flushes bucketed by trigger ("size" | "deadline" | "forced")
+    # flushes bucketed by trigger ("size" | "deadline" | "forced" | "ingest")
     flush_reasons: dict[str, int] = dataclasses.field(default_factory=dict)
+    # ingest operations served through the window ("append"/"delete"/"compact")
+    ingest_counts: dict[str, int] = dataclasses.field(default_factory=dict)
     # per-spec-kind latency histograms: queue (submit -> flush start) and
     # execute (the query's batch execution wall time), observed per query
     queue_latency: dict[str, obs.Histogram] = dataclasses.field(
@@ -198,7 +209,8 @@ class MDRQServer:
     def flush(self, reason: str = "forced") -> int:
         """Execute everything pending as one batch; returns its size.
 
-        ``reason`` names the trigger ("size" | "deadline" | "forced") and is
+        ``reason`` names the trigger ("size" | "deadline" | "forced" |
+        "ingest" — a write draining the window first) and is
         recorded in ``stats.flush_reasons``, in the registry counter
         ``mdrq_server_flushes_total{reason=...}``, on every retained query-log
         entry, and as a ``flush`` trace event when a tracer is active.
@@ -249,6 +261,43 @@ class MDRQServer:
             "mdrq_server_flushes_total",
             help="server batch flushes, by trigger", reason=reason).inc()
         return len(pending)
+
+    # -- the ingest plane ---------------------------------------------------
+    # Writes ride the same admission loop as queries. Each ingest call first
+    # flushes the pending window (reason="ingest"), so results respect
+    # submission order: a query submitted before an append/delete never sees
+    # it, one submitted after always does — deterministic interleaving
+    # without any cross-request locking in the server itself.
+    def append(self, rows) -> np.ndarray:
+        """Append rows ((k, m) array-like) -> their assigned int64 ids."""
+        return self._ingest("append", lambda: self.engine.append(rows))
+
+    def delete(self, ids) -> int:
+        """Tombstone ids -> count of newly deleted rows."""
+        return self._ingest("delete", lambda: self.engine.delete(ids))
+
+    def compact(self) -> np.ndarray:
+        """Compact the engine's delta -> the old-id -> new-id map."""
+        return self._ingest("compact", lambda: self.engine.compact())
+
+    def _ingest(self, op: str, fn):
+        self.flush(reason="ingest")
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        size = int(out.size) if isinstance(out, np.ndarray) else int(out)
+        # ingest rows share the query log (bound-less entries, spec_kind
+        # "ingest") so the audit layer sees writes interleaved with reads
+        nan_bounds = np.full((self.engine.dataset.m,), np.nan, np.float32)
+        self.query_log.offer(obs.QueryLogEntry(
+            lower=nan_bounds, upper=nan_bounds, spec_kind="ingest",
+            method=op, result_size=size, queue_seconds=0.0,
+            execute_seconds=dt, flush_reason="ingest", batch_size=1))
+        self.stats.ingest_counts[op] = self.stats.ingest_counts.get(op, 0) + 1
+        obs.registry().counter("mdrq_ingest_total",
+                               help="server ingest operations, by op",
+                               op=op).inc()
+        return out
 
     def serve_all(self, queries: list[RangeQuery]
                   ) -> list[Union[np.ndarray, int]]:
