@@ -1,7 +1,8 @@
 # Developer entry points. The tier-1 gate is exactly what CI runs.
 PYTHONPATH := src
 
-.PHONY: test test-dist smoke lint bench-throughput bench-count bench-specs \
+.PHONY: test test-dist smoke lint lint-mdrq \
+        bench-throughput bench-count bench-specs \
         bench-specs-smoke bench-smoke bench-ingest bench-ingest-smoke \
         bench-dist bench
 
@@ -24,9 +25,14 @@ smoke:
 bench-throughput:
 	PYTHONPATH=src python -m benchmarks.run --only throughput
 
-# Lint gate (config in pyproject.toml; CI runs exactly this).
-lint:
+# Lint gate: ruff (config in pyproject.toml) + mdrqlint. CI runs exactly this.
+lint: lint-mdrq
 	ruff check .
+
+# mdrqlint: AST-level invariant checks (launch/host-sync accounting, dtype
+# sentinels, lock + registry discipline) — DESIGN.md §12. Stdlib-only.
+lint-mdrq:
+	PYTHONPATH=src python -m repro.analysis src tests
 
 # Count-only result mode sweep (device-side reduction, no host nonzero).
 bench-count:

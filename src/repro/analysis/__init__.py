@@ -1,0 +1,29 @@
+"""mdrqlint — AST-based static checks for this repo's runtime invariants.
+
+The paper's headline result (scans beat MDIS on modern hardware) holds here
+only because every hot path preserves hand-maintained invariants: one kernel
+launch + one *counted* host sync per batch, dtype-correct padding sentinels,
+lock-disciplined version swaps, frozen (jit-static-arg-safe) registry
+entries. Runtime counter asserts (PRs 1-7) only fire on the paths a test
+happens to exercise; mdrqlint checks the same invariants syntactically over
+the whole tree at review time — PR 6's backend-cache bug and PR 3's bf16
+``+inf`` sentinel bug are exactly the class it would have caught.
+
+Usage::
+
+    python -m repro.analysis src tests            # lint, exit 1 on findings
+    python -m repro.analysis --json report.json   # machine-readable report
+    python -m repro.analysis --write-baseline     # accept current findings
+
+Per-line suppression: append ``# mdrqlint: disable=<rule>[,<rule>...]`` (or
+``disable=all``) to the offending line. Accepted legacy debt lives in the
+checked-in ``baseline.json`` next to this package; CI fails only on *new*
+unsuppressed findings. Rules and the invariants they encode are tabulated in
+DESIGN.md §12.
+"""
+from repro.analysis.engine import (Finding, Report, Rule, load_baseline,
+                                   run, write_baseline)
+from repro.analysis.rules import ALL_RULES
+
+__all__ = ["ALL_RULES", "Finding", "Report", "Rule", "load_baseline", "run",
+           "write_baseline"]

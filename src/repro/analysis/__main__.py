@@ -1,0 +1,58 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit status 0 iff no unsuppressed, unbaselined findings. CI runs
+``python -m repro.analysis src tests`` next to ruff (``make lint-mdrq``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.engine import (DEFAULT_BASELINE, load_baseline, run,
+                                   write_baseline)
+from repro.analysis.rules import ALL_RULES
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="mdrqlint: static checks for launch/host-sync/sentinel/"
+                    "lock/registry invariants (DESIGN.md §12)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories to lint (default: src tests)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write the full report as JSON")
+    ap.add_argument("--baseline", metavar="FILE", default=None,
+                    help=f"baseline file (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into the baseline")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print rule ids and the invariants they encode")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.rule_id}: {rule.doc}")
+        return 0
+
+    baseline_path = Path(args.baseline) if args.baseline else None
+    report = run([Path(p) for p in args.paths], ALL_RULES,
+                 baseline=load_baseline(baseline_path))
+
+    if args.write_baseline:
+        path = write_baseline(report, baseline_path)
+        print(f"mdrqlint: wrote {len(report.active) + len(report.baselined)} "
+              f"accepted finding(s) to {path}")
+        return 0
+
+    if args.json:
+        Path(args.json).write_text(
+            json.dumps(report.to_json(), indent=2) + "\n")
+    print(report.format())
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,174 @@
+"""mdrqlint rule engine: findings, suppressions, baseline, file runner.
+
+The engine is deliberately tiny and dependency-free (stdlib ``ast`` only):
+rules receive a parsed ``FileContext`` and return ``Finding`` records; the
+runner splits them into *active* / *suppressed* (a ``# mdrqlint: disable=``
+comment on the finding's line) / *baselined* (listed in the checked-in
+``baseline.json`` — accepted legacy debt, keyed by (file, rule, message) so
+entries survive unrelated line drift).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Iterable, Optional
+
+_SUPPRESS_RE = re.compile(r"#\s*mdrqlint:\s*disable=([\w,\- ]+)")
+
+DEFAULT_BASELINE = Path(__file__).with_name("baseline.json")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One diagnostic: ``file:line rule message``."""
+
+    file: str
+    line: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.file}:{self.line} {self.rule} {self.message}"
+
+    def baseline_key(self) -> str:
+        # line numbers excluded: baseline entries survive unrelated edits
+        return f"{self.file}::{self.rule}::{self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class FileContext:
+    """One parsed source file, handed to every rule."""
+
+    path: Path
+    posix: str  # posix path string; rules scope themselves by substring
+    text: str
+    tree: ast.AST
+
+    @classmethod
+    def parse(cls, path: Path) -> "FileContext":
+        text = path.read_text()
+        return cls(path=path, posix=path.as_posix(), text=text,
+                   tree=ast.parse(text, filename=str(path)))
+
+    def segment(self, node: ast.AST) -> str:
+        return ast.get_source_segment(self.text, node) or ""
+
+
+class Rule:
+    """Base class: subclasses set ``rule_id`` and implement ``check``."""
+
+    rule_id: str = ""
+    doc: str = ""
+
+    def check(self, ctx: FileContext) -> list[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, ctx: FileContext, node: ast.AST, message: str) -> Finding:
+        return Finding(file=ctx.posix, line=getattr(node, "lineno", 0),
+                       rule=self.rule_id, message=message)
+
+
+def parse_suppressions(text: str) -> dict[int, set[str]]:
+    """Map line number -> set of rule ids disabled on that line."""
+    out: dict[int, set[str]] = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def iter_py_files(paths: Iterable[Path]) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_file() and p.suffix == ".py":
+            files.append(p)
+        elif p.is_dir():
+            files.extend(f for f in sorted(p.rglob("*.py"))
+                         if "__pycache__" not in f.parts)
+    return files
+
+
+@dataclasses.dataclass
+class Report:
+    """Partitioned lint results for one run."""
+
+    active: list[Finding] = dataclasses.field(default_factory=list)
+    suppressed: list[Finding] = dataclasses.field(default_factory=list)
+    baselined: list[Finding] = dataclasses.field(default_factory=list)
+    n_files: int = 0
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.active else 0
+
+    def to_json(self) -> dict:
+        return {
+            "findings": [f.to_json() for f in self.active],
+            "suppressed": [f.to_json() for f in self.suppressed],
+            "baselined": [f.to_json() for f in self.baselined],
+            "n_files": self.n_files,
+        }
+
+    def format(self) -> str:
+        lines = [f.format() for f in self.active]
+        lines.append(
+            f"mdrqlint: {len(self.active)} finding(s) "
+            f"({len(self.suppressed)} suppressed, "
+            f"{len(self.baselined)} baselined) in {self.n_files} file(s)")
+        return "\n".join(lines)
+
+
+def load_baseline(path: Optional[Path] = None) -> set[str]:
+    path = Path(path) if path is not None else DEFAULT_BASELINE
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return set(data.get("accepted", []))
+
+
+def write_baseline(report: Report, path: Optional[Path] = None) -> Path:
+    """Accept every current finding (active + baselined) as legacy debt."""
+    path = Path(path) if path is not None else DEFAULT_BASELINE
+    keys = sorted({f.baseline_key()
+                   for f in report.active + report.baselined})
+    path.write_text(json.dumps({"accepted": keys}, indent=2) + "\n")
+    return path
+
+
+def run(paths: Iterable[Path], rules: Iterable[Rule],
+        baseline: Optional[set[str]] = None) -> Report:
+    """Lint ``paths`` with ``rules``; partition findings against baseline."""
+    baseline = baseline or set()
+    report = Report()
+    files = iter_py_files(paths)
+    report.n_files = len(files)
+    for path in files:
+        try:
+            ctx = FileContext.parse(path)
+        except SyntaxError as e:
+            report.active.append(Finding(
+                file=path.as_posix(), line=e.lineno or 0, rule="parse-error",
+                message=f"could not parse: {e.msg}"))
+            continue
+        suppressions = parse_suppressions(ctx.text)
+        for rule in rules:
+            for f in rule.check(ctx):
+                disabled = suppressions.get(f.line, set())
+                if f.rule in disabled or "all" in disabled:
+                    report.suppressed.append(f)
+                elif f.baseline_key() in baseline:
+                    report.baselined.append(f)
+                else:
+                    report.active.append(f)
+    report.active.sort()
+    report.suppressed.sort()
+    report.baselined.sort()
+    return report

@@ -56,7 +56,7 @@ def build_hierarchy(
 
 
 @functools.partial(jax.jit, static_argnames=("fanout",))
-def prune_hierarchy(
+def _prune_hierarchy_jit(
     levels_lo: tuple[jax.Array, ...],
     levels_hi: tuple[jax.Array, ...],
     qlo: jax.Array,
@@ -83,8 +83,15 @@ def prune_hierarchy(
     return active
 
 
+prune_hierarchy = ops.counted(
+    "prune_hierarchy",
+    "Phase-1 MBR hierarchy prune for one query (the tree MDIS's extra "
+    "launch on top of the fused visit kernel).",
+)(_prune_hierarchy_jit)
+
+
 @functools.partial(jax.jit, static_argnames=("fanout",))
-def prune_hierarchy_batch(
+def _prune_hierarchy_batch_jit(
     levels_lo: tuple[jax.Array, ...],
     levels_hi: tuple[jax.Array, ...],
     qlo: jax.Array,
@@ -113,6 +120,14 @@ def prune_hierarchy_batch(
             parents = jnp.repeat(active, fanout, axis=1)[:, : overlap.shape[1]]
             active = jnp.logical_and(parents, overlap)
     return active
+
+
+prune_hierarchy_batch = ops.counted(
+    "prune_hierarchy_batch",
+    "Batched phase-1 MBR hierarchy prune: every query of a batch in one "
+    "vectorized launch (the tree paths' real budget is this launch + its "
+    "survivor-mask sync on top of the fused visit launch).",
+)(_prune_hierarchy_batch_jit)
 
 
 _next_pow2 = T.next_pow2
@@ -303,7 +318,7 @@ class BlockedIndex:
         """Phase 1: (n_leaves,) bool survivors of the hierarchy prune."""
         qlo, qhi = ops.query_bounds_device(q, self.m, jnp.float32)
         mask = prune_hierarchy(self.levels_lo, self.levels_hi, qlo, qhi, self.fanout)
-        return np.asarray(mask)
+        return ops.device_get(mask)
 
     def query(self, q: T.RangeQuery) -> np.ndarray:
         """Full query -> sorted original ids of matching objects."""
@@ -319,7 +334,7 @@ class BlockedIndex:
         qlo, qhi = ops.query_bounds_device(q, self.data_dev.shape[0], self.data_dev.dtype)
         masks = ops.range_scan_visit(self.data_dev, jnp.asarray(ids), qlo, qhi,
                                      tile_n=self.tile_n)
-        masks = np.asarray(masks)[: survivors.size]  # (v, tile_n)
+        masks = ops.device_get(masks)[: survivors.size]  # (v, tile_n)
         # Map (block, offset) -> permuted position -> original id.
         pos = (survivors[:, None] * self.tile_n + np.arange(self.tile_n)[None, :])
         pos = pos[masks > 0]
@@ -345,21 +360,23 @@ class BlockedIndex:
 
     def query_batch(self, batch: T.QueryBatch, spec: T.ResultSpec = T.IDS,
                     delta=None) -> list:
-        """Batched two-phase query: one prune jit + one fused visit launch.
+        """Batched two-phase query: one counted prune launch (+ its
+        survivor-mask sync) + one fused visit launch (+ its payload sync).
 
         Phase 1 prunes all Q queries' hierarchies in a single vectorized
         call; phase 2 flattens the surviving (query, block) pairs into one
         ``multi_visit_reduce`` launch that carries the ResultSpec's
         on-device reducer, so per-query dispatch and host-sync taxes are
         paid once per batch and reduced shapes (count, top-k, aggregate)
-        ship only their payload. Positions map through ``perm`` in the
+        ship only their payload. Both phases are visible to the launch /
+        host-sync counters (mdrqlint's host-sync rule keeps it that way). Positions map through ``perm`` in the
         spec's finalizer (counts and aggregates are permutation-invariant).
         """
         spec = T.validate_mode(spec).validate(self.m)
         q_n = len(batch)
         q_pad = _next_pow2(q_n)  # pow2 query bucket bounds jit retraces
         qlo, qhi = batch.bounds_columnar(self.m, q_pad)
-        leaf_mask = np.asarray(prune_hierarchy_batch(
+        leaf_mask = ops.device_get(prune_hierarchy_batch(
             self.levels_lo, self.levels_hi,
             jnp.asarray(qlo), jnp.asarray(qhi), self.fanout,
         ))[:q_n]  # (Q, n_leaves); padding queries are match-all -> dropped

@@ -455,4 +455,5 @@ class PerQueryPath:
 
     def cost_batch(self, pi: PlanInputs, bucket: np.ndarray, model,
                    spec: T.ResultSpec = T.IDS) -> np.ndarray:
-        return np.full((len(pi),), np.inf)
+        # host-side planner cost, not a device sentinel: f64 inf is exact
+        return np.full((len(pi),), np.inf, np.float64)

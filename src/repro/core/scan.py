@@ -69,7 +69,7 @@ class ColumnarScan:
         """(n,) bool match mask (complete or partial match)."""
         qlo, qhi = ops.query_bounds_device(q, self.data_dev.shape[0], self.data_dev.dtype)
         out = ops.range_scan(self.data_dev, qlo, qhi, tile_n=self.tile_n)
-        return np.asarray(out[: self.n]) > 0
+        return ops.device_get(out)[: self.n] > 0
 
     def mask_partial(self, q: T.RangeQuery) -> np.ndarray:
         """(n,) bool mask touching only the queried dimensions."""
@@ -80,7 +80,7 @@ class ColumnarScan:
         out = ops.range_scan_vertical(
             self.data_dev, jnp.asarray(dims), qlo, qhi, tile_n=self.tile_n
         )
-        return np.asarray(out[: self.n]) > 0
+        return ops.device_get(out)[: self.n] > 0
 
     def query(self, q: T.RangeQuery) -> np.ndarray:
         return np.nonzero(self.mask(q))[0].astype(np.int64)
@@ -200,7 +200,7 @@ class RowScan:
         )
 
     def mask(self, q: T.RangeQuery) -> np.ndarray:
-        return np.asarray(self._mask_device(q)[: self.n]) > 0
+        return ops.device_get(self._mask_device(q))[: self.n] > 0
 
     def query(self, q: T.RangeQuery) -> np.ndarray:
         return np.nonzero(self.mask(q))[0].astype(np.int64)
@@ -219,11 +219,17 @@ def build_row_scan(dataset: T.Dataset, tile_rows: int = 512) -> RowScan:
 
 
 @jax.jit
-def xla_scan_mask(data_cm: jax.Array, qlo: jax.Array, qhi: jax.Array) -> jax.Array:
-    """Plain-XLA (non-Pallas) columnar scan — the 'unoptimized baseline' the
-    Pallas kernel is benchmarked against (paper's scalar-vs-SIMD axis)."""
+def _xla_scan_mask_jit(data_cm: jax.Array, qlo: jax.Array,
+                       qhi: jax.Array) -> jax.Array:
     ok = jnp.logical_and(data_cm >= qlo, data_cm <= qhi)
     return jnp.all(ok, axis=0)
+
+
+xla_scan_mask = ops.counted(
+    "xla_scan_mask",
+    "Plain-XLA (non-Pallas) columnar scan — the 'unoptimized baseline' the "
+    "Pallas kernel is benchmarked against (paper's scalar-vs-SIMD axis).",
+)(_xla_scan_mask_jit)
 
 
 def numpy_scan_ids(cols: np.ndarray, q: T.RangeQuery) -> np.ndarray:

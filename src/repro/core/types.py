@@ -21,6 +21,8 @@ from typing import Any, ClassVar, Optional, Sequence
 import numpy as np
 import jax.numpy as jnp
 
+from repro import numerics
+
 NEG_INF = np.float32(-np.inf)
 POS_INF = np.float32(np.inf)
 
@@ -826,10 +828,8 @@ def finite_query_bounds(lo: np.ndarray, up: np.ndarray, dtype=np.float32):
     extrema are what survive the round trip finite, and all dataset values
     are f32-representable (``Dataset`` stores float32).
     """
-    fin = jnp.finfo(dtype)
-    f32 = np.finfo(np.float32)
-    neg = max(float(fin.min), float(f32.min))
-    pos = min(float(fin.max), float(f32.max))
+    neg = max(numerics.finite_min(dtype), numerics.finite_min(np.float32))
+    pos = min(numerics.finite_max(dtype), numerics.finite_max(np.float32))
     lo = np.where(np.isneginf(lo), neg, lo).astype(np.float32)
     up = np.where(np.isposinf(up), pos, up).astype(np.float32)
     return lo, up

@@ -108,7 +108,7 @@ class VAFile:
             return np.empty((0,), np.int64)
         masks = self._refine(survivors, q)
         pos = survivors[:, None] * self.tile_n + np.arange(self.tile_n)[None, :]
-        pos = pos[np.asarray(masks) > 0]
+        pos = pos[masks > 0]  # already on host: _refine syncs via device_get
         return np.sort(pos[pos < self.n]).astype(np.int64)
 
     def count(self, q: T.RangeQuery) -> int:

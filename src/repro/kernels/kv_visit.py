@@ -27,8 +27,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import numerics
+
 F32 = jnp.float32
-NEG = -2.3819763e38
+NEG = numerics.mask_fill(jnp.bfloat16)  # finite under every score dtype
 
 
 def _kernel(ids_ref, pos_ref, q_ref, k_ref, v_ref, out_ref,

@@ -27,7 +27,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import types as T
 from repro.kernels import multi_scan as _ms
 from repro.kernels import range_scan as _rs
 from repro.kernels import ref as _ref
@@ -164,6 +163,7 @@ def prepare_columnar(
 
     Returns (padded array, m, n) with original sizes.
     """
+    from repro.core import types as T  # deferred: breaks ops<->core cycle
     m, n = cols.shape
     x = T.pad_axis(cols, 0, _rs.SUBLANES, 0.0)
     x = T.pad_axis(x, 1, tile_n, np.inf)
@@ -177,6 +177,7 @@ def query_bounds_device(q: T.RangeQuery, m_pad: int, dtype) -> tuple[jax.Array, 
     finite *in the comparison dtype* (float32 extrema round to +inf under a
     bfloat16 cast and would match the +inf padding sentinels).
     """
+    from repro.core import types as T  # deferred: breaks ops<->core cycle
     lo, up = T.padded_query_bounds(q, m_pad)
     lo, up = T.finite_query_bounds(lo, up, dtype=dtype)
     lo_d = jnp.asarray(lo, dtype=dtype).reshape(-1, 1)
@@ -192,6 +193,7 @@ def batch_bounds_device(batch, m_pad: int, dtype,
     batch to a jit bucket — are match-all in ``dtype``'s finite extrema;
     callers drop their output rows.
     """
+    from repro.core import types as T  # deferred: breaks ops<->core cycle
     if not isinstance(batch, T.QueryBatch):
         batch = T.QueryBatch.from_queries(list(batch))
     lo, up = batch.bounds_columnar(m_pad, q_pad, dtype=dtype)
@@ -607,15 +609,15 @@ def _mask_counts_jit(mask: jax.Array) -> jax.Array:
     return jnp.sum(mask != 0, axis=-1).astype(jnp.int32)
 
 
-def mask_counts(mask: jax.Array) -> jax.Array:
-    """On-device match counts over the object axis (count-only result mode).
-
-    Works for both (n_pad,) single-query and (Q, n_pad) batched masks; padding
-    objects are +inf sentinels that never match, so summing the padded axis is
-    exact. The sum is the ``distributed_count`` pattern localized to one
-    device: the result crossing to host is O(Q) ints, never an id array.
-    """
-    return _mask_counts_jit(mask)
+mask_counts = _counted(
+    "mask_counts",
+    "On-device match counts over the object axis (count-only result mode). "
+    "Works for both (n_pad,) single-query and (Q, n_pad) batched masks; "
+    "padding objects are +inf sentinels that never match, so summing the "
+    "padded axis is exact. The sum is the distributed_count pattern "
+    "localized to one device: the result crossing to host is O(Q) ints, "
+    "never an id array.",
+)(_mask_counts_jit)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

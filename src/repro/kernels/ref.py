@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import numerics
 from repro.kernels.va_filter import BITS_PER_DIM, CODE_MASK, DIMS_PER_WORD
 
 
@@ -148,7 +149,8 @@ def kv_visit_attention_ref(
     valid = (slots <= pos[:, None, None, None]) & (block_ids[..., None] >= 0)
     s = jnp.einsum("bkgh,bkjth->bkgjt", q.astype(jnp.float32),
                    k_sel.astype(jnp.float32)) * (hd ** -0.5)
-    s = jnp.where(valid[:, :, None, :, :], s, -2.3819763e38)
+    s = jnp.where(valid[:, :, None, :, :], s,
+                  numerics.mask_fill(jnp.bfloat16))
     nv = block_ids.shape[-1]
     s = s.reshape(b, kv, g, nv * bs)
     w = jax.nn.softmax(s, axis=-1)

@@ -22,11 +22,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import numerics
 from repro.models.params import Param, dense_init, ones_init
 from repro.models import shardctx
 
 F32 = jnp.float32
-NEG = -2.3819763e38  # large negative for masks (finite in bf16 after cast)
+# large negative for masks, dtype-derived so it stays finite after bf16 casts
+NEG = numerics.mask_fill(jnp.bfloat16)
 
 
 # --------------------------------------------------------------------------
@@ -117,7 +119,7 @@ def _sdpa(q, k, v, mask, n_kv: int, scores_f32: bool = True):
         w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     else:
         scores = scores * scale
-        neg = jnp.asarray(-3e38, scores.dtype)
+        neg = jnp.asarray(numerics.mask_fill(scores.dtype), scores.dtype)
         scores = jnp.where(mask[:, None, None, :, :], scores, neg)
         m = jnp.max(scores.astype(F32), axis=-1, keepdims=True)
         e = jnp.exp((scores.astype(F32) - m)).astype(q.dtype)

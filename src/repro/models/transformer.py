@@ -20,6 +20,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import numerics
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import rglru as R
@@ -315,7 +316,8 @@ class DecoderLM:
             cache["v_scale"] = jnp.zeros((cfg.n_layers, batch, w, kv, 1), F32)
         if cfg.kv_block_prune:
             nb = w // cfg.kv_block_size
-            big = jnp.asarray(3e38, F32)
+            # zone-map "+infinity": dtype-derived so it survives bf16 casts
+            big = jnp.asarray(numerics.finite_max(jnp.bfloat16), F32)
             cache["kmin"] = jnp.full((cfg.n_layers, batch, nb, kv, hd), big, F32)
             cache["kmax"] = jnp.full((cfg.n_layers, batch, nb, kv, hd), -big, F32)
         return cache

@@ -1,0 +1,46 @@
+"""Dtype-aware numeric sentinels (the PR 3 bf16 lesson, as a library).
+
+Hardcoded extrema like ``-3e38`` are a dtype bug waiting to happen: a value
+chosen to be "large but finite in float32" is only finite in *some* target
+dtypes. bfloat16 shares float32's exponent range but its largest finite value
+is smaller (``(2 - 2^-7) * 2^127`` vs ``(2 - 2^-23) * 2^127``), so float32
+extrema round **up to inf** under an f32 -> bf16 cast — the exact failure that
+made +inf padding sentinels match real queries in PR 3, and that turns an
+additive attention mask into NaN logits after softmax max-subtraction.
+
+These helpers derive every sentinel from ``jnp.finfo`` of the dtype that will
+actually hold the value, so there is no literal to rot when a model flips
+``param_dtype`` or a carrier array is quantized.
+
+Query-bound sanitization (±inf -> finite extrema on the *kernel comparison
+dtype*) lives in ``core.types.finite_query_bounds``, built on the same
+``finfo``-derived extrema. mdrqlint's ``sentinel`` rule (DESIGN.md §12) flags
+``3e38``-family literals and steers device-facing code to one of the two.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["finite_min", "finite_max", "mask_fill"]
+
+
+def finite_min(dtype) -> float:
+    """Most negative finite value representable in ``dtype``, as a float."""
+    return float(jnp.finfo(jnp.dtype(dtype)).min)
+
+
+def finite_max(dtype) -> float:
+    """Largest finite value representable in ``dtype``, as a float."""
+    return float(jnp.finfo(jnp.dtype(dtype)).max)
+
+
+def mask_fill(dtype=jnp.bfloat16) -> float:
+    """Additive attention-mask fill: large negative, finite in ``dtype``.
+
+    Pass the *narrowest* dtype the masked scores may ever be cast to (the
+    default, bfloat16, survives bf16 <-> f32 round trips). The 0.7 factor
+    keeps headroom so adding real score magnitudes on top of the fill cannot
+    overflow ``dtype`` before the softmax zeroes the lane; ``exp`` of any
+    value at this scale underflows to exactly 0 in every float dtype.
+    """
+    return 0.7 * finite_min(dtype)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Dataset, MDRQEngine, RangeQuery
+from repro.kernels import ops
 from repro.serve.serve_step import greedy_sample, make_serve_step
 
 REQUEST_FEATURES = ["priority", "prompt_len", "deadline_ms", "est_cost"]
@@ -101,7 +102,9 @@ class BatchServer:
             logits, self.cache = self.step_fn(
                 self.params, self.cache, jnp.asarray(toks),
                 jnp.asarray(self.pos))
-            nxt = np.asarray(greedy_sample(logits, self.cfg.vocab_size))[:, 0]
+            # counted host sync: the decode loop's per-step device->host read
+            # (serve-side syncs show up in the host_sync counter budget)
+            nxt = ops.device_get(greedy_sample(logits, self.cfg.vocab_size))[:, 0]
             for s in range(self.slots):
                 if self.active[s] is None:
                     continue

@@ -21,6 +21,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro.kernels import ops
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import OptConfig, init_opt_state
 from repro.train.train_step import make_train_step
@@ -106,12 +107,13 @@ class Trainer:
         t0 = time.perf_counter()
         self.params, self.opt_state, metrics = self.train_step(
             self.params, self.opt_state, batch)
-        loss = float(metrics["loss"])
+        # counted host sync: blocking on the loss is the step's backpressure
+        loss = float(ops.device_get(metrics["loss"]))
         dt = time.perf_counter() - t0
         self.step += 1
         if self.step % self.tcfg.log_every == 0 or self.step == 1:
             rec = {"step": self.step, "loss": loss, "sec": dt,
-                   "grad_norm": float(metrics["grad_norm"])}
+                   "grad_norm": float(ops.device_get(metrics["grad_norm"]))}
             self.metrics_log.append(rec)
         if self.step % self.tcfg.ckpt_every == 0:
             self.save()

@@ -1,0 +1,357 @@
+"""mdrqlint: per-rule positive/negative fixtures, suppression + baseline
+round-trips, and the standing assertion that the shipped tree lints clean.
+
+Fixtures are written to tmp dirs whose layout mimics ``repro/...`` because
+rules scope themselves by posix-path substring (e.g. uncounted-launch only
+fires inside ``repro/kernels/`` and ``repro/core/``).
+"""
+from __future__ import annotations
+
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import engine
+from repro.analysis.__main__ import main as lint_main
+from repro.analysis.rules import (ALL_RULES, HostSyncRule, LockDisciplineRule,
+                                  RawShardMapRule, RegistryHygieneRule,
+                                  SentinelRule, UncountedLaunchRule)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint_one(tmp_path: Path, rel: str, source: str, rule) -> engine.Report:
+    """Write ``source`` at tmp/<rel> and run a single rule over it."""
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    return engine.run([path], [rule])
+
+
+# -- rule 1: host-sync --------------------------------------------------------
+
+def test_host_sync_flags_raw_coercions(tmp_path):
+    rep = lint_one(tmp_path, "repro/core/bad_sync.py", """\
+        import jax
+        import numpy as np
+        from repro.kernels import ops
+
+        def leaky(q):
+            out = ops.multi_scan_reduce(q)        # device-value source
+            jax.device_get(out)                   # raw sync API
+            return float(out)                     # raw coercion sink
+        """, HostSyncRule())
+    rules = [f.rule for f in rep.active]
+    assert rules == ["host-sync", "host-sync"]
+    assert "jax.device_get" in rep.active[0].message
+    assert "float()" in rep.active[1].message
+
+
+def test_host_sync_accepts_counted_device_get(tmp_path):
+    rep = lint_one(tmp_path, "repro/core/good_sync.py", """\
+        from repro.kernels import ops
+
+        def clean(q):
+            out = ops.multi_scan_reduce(q)
+            host = ops.device_get(out)            # the counted sync
+            return float(host)                    # host value: not a sync
+        """, HostSyncRule())
+    assert rep.active == []
+
+
+def test_host_sync_tracks_taint_through_helpers(tmp_path):
+    # _launch returns a device value; the caller's np.asarray is the sync
+    rep = lint_one(tmp_path, "repro/core/chained.py", """\
+        import numpy as np
+        from repro.kernels import ops
+
+        def _launch(q):
+            return ops.multi_scan_reduce(q)
+
+        def caller(q):
+            return np.asarray(_launch(q))
+        """, HostSyncRule())
+    assert [f.rule for f in rep.active] == ["host-sync"]
+    assert "asarray" in rep.active[0].message
+
+
+# -- rule 2: uncounted-launch -------------------------------------------------
+
+def test_uncounted_launch_flags_bare_jit(tmp_path):
+    rep = lint_one(tmp_path, "repro/kernels/bad_jit.py", """\
+        import jax
+
+        @jax.jit
+        def fast(x):
+            return x + 1
+
+        faster = jax.jit(fast)
+        """, UncountedLaunchRule())
+    msgs = [f.message for f in rep.active]
+    assert len(msgs) == 2
+    assert any("'fast'" in m for m in msgs)
+    assert any("'faster'" in m for m in msgs)
+
+
+def test_uncounted_launch_accepts_registered(tmp_path):
+    rep = lint_one(tmp_path, "repro/kernels/good_jit.py", """\
+        import jax
+        from repro.kernels import ops
+
+        @jax.jit
+        def _fast_jit(x):
+            return x + 1
+
+        fast = ops.counted("fast", "Example counted entry point.")(_fast_jit)
+        """, UncountedLaunchRule())
+    assert rep.active == []
+
+
+def test_uncounted_launch_scoped_to_kernels_and_core(tmp_path):
+    # a jit in obs/ is not an engine entry point; the rule stays quiet
+    rep = lint_one(tmp_path, "repro/obs/free_jit.py", """\
+        import jax
+
+        @jax.jit
+        def helper(x):
+            return x * 2
+        """, UncountedLaunchRule())
+    assert rep.active == []
+
+
+# -- rule 3: raw-shard-map ----------------------------------------------------
+
+def test_raw_shard_map_flagged(tmp_path):
+    rep = lint_one(tmp_path, "repro/core/bad_dist.py", """\
+        from jax.experimental.shard_map import shard_map
+
+        def spread(f, mesh):
+            return shard_map(f, mesh=mesh)
+        """, RawShardMapRule())
+    assert [f.rule for f in rep.active] == ["raw-shard-map"]
+    assert "shard_map_compat" in rep.active[0].message
+
+
+def test_shard_map_compat_accepted(tmp_path):
+    rep = lint_one(tmp_path, "repro/core/good_dist.py", """\
+        from repro.core.distributed import shard_map_compat
+
+        def spread(f, mesh):
+            return shard_map_compat(f, mesh=mesh)
+        """, RawShardMapRule())
+    assert rep.active == []
+
+
+# -- rule 4: sentinel ---------------------------------------------------------
+
+def test_sentinel_flags_f32_scale_literals_and_blind_inf_casts(tmp_path):
+    rep = lint_one(tmp_path, "repro/models/bad_mask.py", """\
+        import jax.numpy as jnp
+        import numpy as np
+
+        NEG = -3.0e38                       # rounds to -inf under bf16
+        pad = jnp.full((4,), np.inf)        # inf into an unknown dtype
+        """, SentinelRule())
+    rules = [f.rule for f in rep.active]
+    assert rules == ["sentinel", "sentinel"]
+    assert "bf16" in rep.active[0].message
+
+
+def test_sentinel_accepts_numerics_and_explicit_wide_dtypes(tmp_path):
+    rep = lint_one(tmp_path, "repro/models/good_mask.py", """\
+        import jax.numpy as jnp
+        import numpy as np
+        from repro import numerics
+
+        NEG = numerics.mask_fill(jnp.bfloat16)
+        cost = np.full((4,), np.inf, np.float64)   # f64 inf is exact
+        """, SentinelRule())
+    assert rep.active == []
+
+
+# -- rule 5: lock-discipline --------------------------------------------------
+
+def test_lock_discipline_flags_off_lock_write(tmp_path):
+    rep = lint_one(tmp_path, "repro/core/bad_lock.py", """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0              # __init__ is exempt
+
+            def add(self):
+                with self._lock:
+                    self.count += 1
+
+            def reset(self):
+                self.count = 0              # off-lock write to guarded attr
+        """, LockDisciplineRule())
+    assert [f.rule for f in rep.active] == ["lock-discipline"]
+    assert "Counter.count" in rep.active[0].message
+
+
+def test_lock_discipline_accepts_guarded_writes(tmp_path):
+    rep = lint_one(tmp_path, "repro/core/good_lock.py", """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+
+            def add(self):
+                with self._lock:
+                    self.count += 1
+
+            def reset(self):
+                with self._lock:
+                    self.count = 0
+        """, LockDisciplineRule())
+    assert rep.active == []
+
+
+def test_lock_discipline_flags_state_mutation_and_off_lock_swap(tmp_path):
+    rep = lint_one(tmp_path, "repro/core/bad_state.py", """\
+        class Engine:
+            def patch(self, cols):
+                self._state.cols = cols     # in-place mutation
+
+            def swap(self, new):
+                self._state = new           # swap outside the ingest lock
+        """, LockDisciplineRule())
+    msgs = [f.message for f in rep.active]
+    assert len(msgs) == 2
+    assert any("in-place" in m for m in msgs)
+    assert any("ingest lock" in m for m in msgs)
+
+
+def test_lock_discipline_accepts_single_swap_under_ingest_lock(tmp_path):
+    rep = lint_one(tmp_path, "repro/core/good_state.py", """\
+        class Engine:
+            def swap(self, new):
+                with self._ingest_lock:
+                    self._state = new
+        """, LockDisciplineRule())
+    assert rep.active == []
+
+
+# -- rule 6: registry-hygiene -------------------------------------------------
+
+def test_registry_hygiene_flags_non_frozen_and_mutable_default(tmp_path):
+    rep = lint_one(tmp_path, "repro/core/bad_spec.py", """\
+        from repro.core.types import register_result_spec
+
+        @register_result_spec
+        class Sloppy:
+            cache = []
+        """, RegistryHygieneRule())
+    msgs = [f.message for f in rep.active]
+    assert len(msgs) == 2
+    assert any("frozen dataclass" in m for m in msgs)
+    assert any("mutable class-level default" in m for m in msgs)
+
+
+def test_registry_hygiene_accepts_frozen_dataclass(tmp_path):
+    rep = lint_one(tmp_path, "repro/core/good_spec.py", """\
+        import dataclasses
+
+        from repro.core.types import register_result_spec
+
+        @register_result_spec
+        @dataclasses.dataclass(frozen=True)
+        class Tidy:
+            k: int = 4
+            dims: tuple = ()
+        """, RegistryHygieneRule())
+    assert rep.active == []
+
+
+# -- suppressions and baseline ------------------------------------------------
+
+def test_inline_suppression_moves_finding_out_of_active(tmp_path):
+    rep = lint_one(tmp_path, "repro/models/sup.py", """\
+        NEG = -3.0e38  # mdrqlint: disable=sentinel
+        POS = 3.0e38   # mdrqlint: disable=all
+        """, SentinelRule())
+    assert rep.active == []
+    assert [f.rule for f in rep.suppressed] == ["sentinel", "sentinel"]
+    assert rep.exit_code == 0
+
+
+def test_baseline_round_trip(tmp_path):
+    path = tmp_path / "repro" / "models" / "legacy.py"
+    path.parent.mkdir(parents=True)
+    path.write_text("OLD = -3.0e38\n")
+
+    first = engine.run([path], [SentinelRule()])
+    assert first.exit_code == 1 and len(first.active) == 1
+
+    bl = tmp_path / "baseline.json"
+    engine.write_baseline(first, bl)
+    accepted = engine.load_baseline(bl)
+    assert accepted == {first.active[0].baseline_key()}
+
+    second = engine.run([path], [SentinelRule()], baseline=accepted)
+    assert second.exit_code == 0
+    assert second.active == [] and len(second.baselined) == 1
+
+    # baseline keys carry no line numbers, so entries survive line drift
+    path.write_text("# a new leading comment\nOLD = -3.0e38\n")
+    third = engine.run([path], [SentinelRule()], baseline=accepted)
+    assert third.exit_code == 0 and len(third.baselined) == 1
+
+
+def test_cli_baseline_flags_round_trip(tmp_path, capsys):
+    path = tmp_path / "repro" / "models" / "legacy.py"
+    path.parent.mkdir(parents=True)
+    path.write_text("OLD = -3.0e38\n")
+    bl = tmp_path / "bl.json"
+
+    assert lint_main([str(path), "--baseline", str(bl)]) == 1
+    assert lint_main([str(path), "--baseline", str(bl),
+                      "--write-baseline"]) == 0
+    assert lint_main([str(path), "--baseline", str(bl)]) == 0
+    out = capsys.readouterr().out
+    assert "1 baselined" in out
+
+
+def test_report_format_and_json(tmp_path):
+    path = tmp_path / "repro" / "models" / "m.py"
+    path.parent.mkdir(parents=True)
+    path.write_text("NEG = -3.0e38\n")
+    rep = engine.run([path], [SentinelRule()])
+    line = rep.active[0].format()
+    assert line.startswith(path.as_posix() + ":1 sentinel ")
+    data = rep.to_json()
+    assert data["n_files"] == 1
+    assert data["findings"][0]["rule"] == "sentinel"
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    path = tmp_path / "repro" / "core" / "broken.py"
+    path.parent.mkdir(parents=True)
+    path.write_text("def oops(:\n")
+    rep = engine.run([path], ALL_RULES)
+    assert rep.exit_code == 1
+    assert rep.active[0].rule == "parse-error"
+
+
+# -- the shipped tree lints clean ---------------------------------------------
+
+def test_shipped_tree_is_clean():
+    """src/ and tests/ carry no active findings under the checked-in
+    baseline — the same invocation CI runs via ``make lint-mdrq``."""
+    rc = lint_main([str(REPO / "src"), str(REPO / "tests")])
+    assert rc == 0
+
+
+def test_all_rules_have_ids_and_docs():
+    ids = [r.rule_id for r in ALL_RULES]
+    assert len(ids) == len(set(ids)) == 6
+    assert all(r.doc for r in ALL_RULES)
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

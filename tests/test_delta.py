@@ -173,7 +173,8 @@ def test_reduced_specs_budget_unchanged_with_delta(spec, eng_delta):
     assert ops.counters() == {"multi_scan_vertical_reduce": 1, "host_sync": 1}
     ops.reset_counters()
     eng.query_batch(queries, method="kdtree", spec=spec)
-    assert ops.counters() == {"multi_visit_reduce": 1, "host_sync": 1}
+    assert ops.counters() == {"prune_hierarchy_batch": 1,
+                              "multi_visit_reduce": 1, "host_sync": 2}
     ops.reset_counters()
     eng.query_batch(queries, method="vafile", spec=spec)
     assert ops.counters() == {"multi_va_filter": 1, "multi_visit_reduce": 1,

@@ -193,14 +193,15 @@ def test_reduced_specs_one_launch_one_sync_scan_paths(spec, eng_all, uni5):
                          ids=lambda s: s.kind)
 def test_reduced_specs_budget_two_phase_paths(spec, eng_all, uni5):
     """The two-phase paths add exactly one fused visit-reduce launch and one
-    payload sync on top of their phase-1 budget (tree prune rides an
-    uncounted jit; the VA filter is its own counted launch + survivor-bit
-    sync, as in PR 2)."""
+    payload sync on top of their phase-1 budget: the tree prune is its own
+    counted launch + survivor-mask sync, and the VA filter likewise, so both
+    land at two launches + two syncs total."""
     rng = np.random.default_rng(17)
     queries = _mixed_queries(uni5.cols, rng, 6)
     ops.reset_counters()
     eng_all.query_batch(queries, method="kdtree", spec=spec)
-    assert ops.counters() == {"multi_visit_reduce": 1, "host_sync": 1}
+    assert ops.counters() == {"prune_hierarchy_batch": 1,
+                              "multi_visit_reduce": 1, "host_sync": 2}
     ops.reset_counters()
     eng_all.query_batch(queries, method="vafile", spec=spec)
     assert ops.counters() == {"multi_va_filter": 1, "multi_visit_reduce": 1,
