@@ -4,7 +4,7 @@ PYTHONPATH := src
 .PHONY: test test-dist smoke lint lint-mdrq \
         bench-throughput bench-count bench-specs \
         bench-specs-smoke bench-smoke bench-ingest bench-ingest-smoke \
-        bench-dist bench
+        bench-pipeline bench-pipeline-smoke bench-dist bench
 
 # Tier-1 verify: the full test suite, fail-fast.
 test:
@@ -55,6 +55,19 @@ BENCH_SMOKE_OUT ?= BENCH_smoke.json
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_throughput --smoke \
 	--json $(BENCH_SMOKE_OUT)
+
+# Pipelined serving: sync-vs-pipelined head-to-head + offered-load sweep
+# (saturation knee, p99 under load, shed fraction) -> BENCH_pipeline.json.
+bench-pipeline:
+	PYTHONPATH=src python -m benchmarks.bench_throughput --offered-load
+
+# CI-sized pipeline smoke: same sweep at tiny n. CI runs this into /tmp and
+# diffs against the checked-in BENCH_pipeline.json (benchmarks.check_bench,
+# +-30% guard band, warn-only).
+BENCH_PIPELINE_OUT ?= BENCH_pipeline.json
+bench-pipeline-smoke:
+	PYTHONPATH=src python -m benchmarks.bench_throughput --offered-load \
+	--smoke --json $(BENCH_PIPELINE_OUT)
 
 # Serve-while-ingest sweep: qps vs delta fraction + post-compaction recovery.
 bench-ingest:

@@ -244,6 +244,124 @@ def run_ingest(quick: bool = True, smoke: bool = False) -> None:
              result_spec="count")
 
 
+def _offered_load_pass(srv, queries, offered_qps: float) -> tuple[float, int]:
+    """Open-loop driver: Poisson-free fixed-rate arrivals at ``offered_qps``.
+
+    Submits each query at its scheduled arrival instant (polling the server's
+    deadline flush while waiting — the real admission-loop shape), then
+    drains. Returns (wall seconds, queries shed at admission). Unlike the
+    closed-loop ``serve_all``, a saturated server here keeps receiving
+    arrivals it cannot absorb — exactly the regime admission control exists
+    for."""
+    interval = 1.0 / offered_qps
+    t0 = time.perf_counter()
+    n_shed = 0
+    for i, q in enumerate(queries):
+        target = t0 + i * interval
+        while True:
+            now = time.perf_counter()
+            if now >= target:
+                break
+            srv.poll()
+            time.sleep(min(target - now, 2e-4))
+        if getattr(srv.submit(q), "shed", False):
+            n_shed += 1
+    srv.drain()
+    return time.perf_counter() - t0, n_shed
+
+
+# Offered load as a fraction of the measured closed-loop pipelined qps —
+# machine-independent keys, so check_bench can diff points across runs whose
+# absolute qps differ.
+OFFERED_FRACS = (0.25, 0.5, 0.75, 1.0, 1.25, 1.5)
+
+
+def run_pipeline(quick: bool = True, smoke: bool = False,
+                 json_path: str = "BENCH_pipeline.json") -> None:
+    """Pipelined-serving bench (``--offered-load`` / ``make bench-pipeline-smoke``).
+
+    Two sections, written to ``json_path``:
+
+      * head-to-head: closed-loop qps of the synchronous ``MDRQServer`` vs
+        the AOT-warmed ``PipelinedMDRQServer`` at the largest batch — the
+        double-buffering win (device stage overlapping host finalize);
+      * offered-load sweep: fixed-rate arrivals at fractions of the
+        pipelined closed-loop qps, recording achieved qps, shed fraction,
+        and p99 queue/execute latency per point. The *saturation knee* is
+        the highest offered load the server absorbs (achieved >= 90% of
+        offered, sheds < 1%); past it, admission control sheds instead of
+        letting queue latency diverge.
+    """
+    from repro.kernels import ops
+    from repro.serve import serve_pipelined
+
+    eng, mixed, n_queries = _workload(quick, smoke=smoke)
+    batch = 32 if smoke else BATCH_SIZES[-1]
+
+    sync_qps, _ = _throughput(eng, mixed, batch)
+    emit_row(f"pipeline/sync/B{batch}", 1e6 / sync_qps, f"qps={sync_qps:.1f}")
+
+    with serve_pipelined(eng, max_batch=batch, max_wait_s=float("inf"),
+                         warmup=True, latency_budget_s=1e9) as srv:
+        wrep = srv.last_warmup
+        srv.serve_all(mixed[: 2 * batch])   # post-warmup dry pass
+        srv.drain()
+        srv.reset_stats()
+        srv.serve_all(mixed)
+        srv.drain()
+        pipe_qps = srv.stats.qps
+    emit_row(f"pipeline/pipelined/B{batch}", 1e6 / pipe_qps,
+             f"qps={pipe_qps:.1f};vs_sync={pipe_qps / sync_qps:.2f}x;"
+             f"aot_compiled={wrep.n_compiled};"
+             f"warmup_s={wrep.seconds:.2f}")
+
+    # Offered-load sweep on a server with a *real* latency budget (~8
+    # windows of drain time) so saturation sheds instead of queueing.
+    budget = max(0.05, 8 * batch / pipe_qps)
+    points, knee = [], 0.0
+    with serve_pipelined(eng, max_batch=batch, max_wait_s=5e-3,
+                         warmup=True, backlog=4,
+                         latency_budget_s=budget) as srv:
+        for frac in OFFERED_FRACS:
+            offered = frac * pipe_qps
+            srv.reset_stats()
+            wall, n_shed = _offered_load_pass(srv, mixed, offered)
+            st = srv.stats
+            achieved = st.n_queries / wall
+            shed_frac = n_shed / len(mixed)
+            lat = st.latency_percentiles("ids")
+            p99q = lat["queue"].get("p99", 0.0) if lat["queue"] else 0.0
+            p99x = lat["execute"].get("p99", 0.0) if lat["execute"] else 0.0
+            if shed_frac < 0.01 and achieved >= 0.9 * offered:
+                knee = max(knee, offered)
+            points.append({
+                "frac": frac,
+                "offered_qps": round(offered, 2),
+                "achieved_qps": round(achieved, 2),
+                "shed_frac": round(shed_frac, 4),
+                "p99_queue_s": round(p99q, 6),
+                "p99_execute_s": round(p99x, 6),
+            })
+            emit_row(f"pipeline/offered{frac:g}x/B{batch}", 1e6 / achieved,
+                     f"qps={achieved:.1f};offered={offered:.1f};"
+                     f"shed={100 * shed_frac:.1f}%;"
+                     f"p99_queue_us={1e6 * p99q:.0f}")
+
+    write_bench_json(
+        json_path, "pipeline",
+        backend=os.environ.get("REPRO_KERNEL_BACKEND", "auto"),
+        n=eng.dataset.n, n_queries=n_queries, batch=batch,
+        head_to_head={"sync_qps": round(sync_qps, 2),
+                      "pipelined_qps": round(pipe_qps, 2),
+                      "speedup": round(pipe_qps / sync_qps, 3)},
+        warmup={"n_runs": wrep.n_runs, "n_compiled": wrep.n_compiled,
+                "seconds": round(wrep.seconds, 3),
+                "aot_hits": ops.aot_counters().get("hit", 0)},
+        latency_budget_s=round(budget, 4),
+        knee_qps=round(knee, 2),
+        offered=points)
+
+
 def run_devices(quick: bool = True) -> None:
     """Cross-device batched-scan sweep (``--devices`` / ``make bench-dist``).
 
@@ -295,6 +413,11 @@ if __name__ == "__main__":
     ap.add_argument("--ingest", action="store_true",
                     help="serve-while-ingest sweep: qps vs delta fraction, "
                          "plus the post-compaction recovery row")
+    ap.add_argument("--offered-load", action="store_true",
+                    help="pipelined serving bench: sync-vs-pipelined "
+                         "head-to-head plus the qps-vs-offered-load sweep "
+                         "(saturation knee, p99 under load, shed fraction) "
+                         "-> BENCH_pipeline.json")
     ap.add_argument("--devices", action="store_true",
                     help="cross-device batched scan sweep (forces an "
                          "8-device CPU platform when XLA_FLAGS is unset)")
@@ -304,7 +427,10 @@ if __name__ == "__main__":
     args = ap.parse_args()
     from benchmarks.common import CSV_HEADER
     print(CSV_HEADER, flush=True)
-    if args.devices:
+    if args.offered_load:
+        run_pipeline(quick=not args.full, smoke=args.smoke,
+                     json_path=args.json or "BENCH_pipeline.json")
+    elif args.devices:
         run_devices(quick=not args.full)
     elif args.ingest:
         run_ingest(quick=not args.full, smoke=args.smoke)

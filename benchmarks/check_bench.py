@@ -1,10 +1,22 @@
-"""Diff a fresh BENCH_smoke.json against the checked-in baseline.
+"""Diff a fresh bench JSON artifact against the checked-in baseline.
 
-CI regression guard for the serving path: ``make bench-smoke`` writes a fresh
-artifact, and this script compares its per-batch-size qps to the baseline
-with a guard band (default +-30%). Outside the band it *warns* — shared CI
-runners are too noisy for a hard throughput gate — and exits 0; ``--strict``
-turns the warnings into a non-zero exit for dedicated perf machines.
+CI regression guard for the serving path: ``make bench-smoke`` /
+``make bench-pipeline-smoke`` write fresh artifacts, and this script compares
+their qps points to the baseline with a guard band (default +-30%). Outside
+the band it *warns* — shared CI runners are too noisy for a hard throughput
+gate — and exits 0; ``--strict`` turns the warnings into a non-zero exit for
+dedicated perf machines.
+
+Two artifact shapes are understood, keyed by which point list the doc
+carries:
+
+  * ``batches``: per-batch-size points, keyed ``B<batch>``, metric ``qps``
+    (BENCH_smoke.json);
+  * ``offered``: offered-load sweep points, keyed by the machine-independent
+    ladder fraction ``offered<frac>x``, metric ``achieved_qps``
+    (BENCH_pipeline.json — absolute offered qps differs across machines, the
+    ladder fraction does not). The pipeline doc's ``head_to_head`` qps pair
+    is compared too.
 
   PYTHONPATH=src python -m benchmarks.check_bench /tmp/BENCH_smoke.json \
       BENCH_smoke.json [--band 0.30] [--strict]
@@ -16,37 +28,47 @@ import json
 import sys
 
 
-def _by_batch(doc: dict) -> dict[int, dict]:
-    return {int(b["batch"]): b for b in doc.get("batches", [])}
+def _points(doc: dict) -> dict[str, float]:
+    """label -> qps metric, for whichever point list the artifact carries."""
+    out: dict[str, float] = {}
+    for b in doc.get("batches", []):
+        out[f"B{int(b['batch'])}"] = float(b["qps"])
+    for p in doc.get("offered", []):
+        out[f"offered{p['frac']:g}x"] = float(p["achieved_qps"])
+    hth = doc.get("head_to_head")
+    if hth:
+        out["sync"] = float(hth["sync_qps"])
+        out["pipelined"] = float(hth["pipelined_qps"])
+    return out
 
 
 def compare(fresh: dict, baseline: dict, band: float) -> list[str]:
     """Human-readable comparison lines; entries breaching the band are
     prefixed with WARN."""
     out = []
-    fb, bb = _by_batch(fresh), _by_batch(baseline)
-    for batch in sorted(bb):
-        base = bb[batch]["qps"]
-        if batch not in fb:
-            out.append(f"WARN B{batch}: missing from fresh run "
+    fb, bb = _points(fresh), _points(baseline)
+    for label, base in bb.items():
+        if label not in fb:
+            out.append(f"WARN {label}: missing from fresh run "
                        f"(baseline qps={base:.1f})")
             continue
-        cur = fb[batch]["qps"]
+        cur = fb[label]
         ratio = cur / base if base > 0 else float("inf")
-        line = (f"B{batch}: qps {cur:.1f} vs baseline {base:.1f} "
+        line = (f"{label}: qps {cur:.1f} vs baseline {base:.1f} "
                 f"(x{ratio:.2f}, band x{1 - band:.2f}..x{1 + band:.2f})")
         if not (1.0 - band) <= ratio <= (1.0 + band):
             line = "WARN " + line
         out.append(line)
-    for batch in sorted(set(fb) - set(bb)):
-        out.append(f"B{batch}: new (qps={fb[batch]['qps']:.1f}, no baseline)")
+    for label in fb:
+        if label not in bb:
+            out.append(f"{label}: new (qps={fb[label]:.1f}, no baseline)")
     return out
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("fresh", help="just-produced BENCH_smoke.json")
-    ap.add_argument("baseline", help="checked-in BENCH_smoke.json")
+    ap.add_argument("fresh", help="just-produced bench JSON artifact")
+    ap.add_argument("baseline", help="checked-in baseline artifact")
     ap.add_argument("--band", type=float, default=0.30,
                     help="relative qps guard band (0.30 = +-30%%)")
     ap.add_argument("--strict", action="store_true",
@@ -63,7 +85,8 @@ def main() -> int:
         print(line, flush=True)
     if warned:
         print("check_bench: qps outside the guard band (warn-only; "
-              "rerun or refresh the baseline via `make bench-smoke`)"
+              "rerun or refresh the baseline via `make bench-smoke` / "
+              "`make bench-pipeline-smoke`)"
               if not args.strict else
               "check_bench: FAILED (--strict)", flush=True)
     return 1 if (warned and args.strict) else 0

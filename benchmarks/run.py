@@ -34,6 +34,9 @@ SECTIONS = [
     ("throughput-specs", "benchmarks.bench_throughput", "run_specs"),
     # serve-while-ingest: qps vs delta fraction + post-compaction recovery
     ("throughput-ingest", "benchmarks.bench_throughput", "run_ingest"),
+    # AOT-warmed double-buffered pipeline: sync-vs-pipelined head-to-head
+    # plus the offered-load sweep (saturation knee, p99 under load)
+    ("throughput-pipeline", "benchmarks.bench_throughput", "run_pipeline"),
     # multi-device sweep: needs XLA_FLAGS=--xla_force_host_platform_device_
     # count=8 in the environment (see `make bench-dist`); degrades to a D1
     # row + a pointer when the process only sees one device.

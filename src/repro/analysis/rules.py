@@ -109,7 +109,10 @@ def _in_repro(posix: str) -> bool:
 # ops.* helpers that return HOST data (or are pure bookkeeping): calls to
 # these are not device-value sources, and device_get launders taint.
 _OPS_HOST_FNS = {"device_get", "counter", "counters", "reset_counters",
-                 "use_xla", "set_backend", "default_interpret", "counted"}
+                 "use_xla", "set_backend", "default_interpret", "counted",
+                 "note_trace", "trace_log", "reset_trace_log", "aot_capture",
+                 "aot_cache_size", "aot_cache_keys", "clear_aot_cache",
+                 "aot_counters"}
 _RAW_SYNC_FNS = {"jax.device_get", "jax.block_until_ready"}
 _CAST_SINKS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
                "float", "int", "bool"}
@@ -670,7 +673,104 @@ class RegistryHygieneRule(Rule):
         return findings
 
 
+# ---------------------------------------------------------------------------
+# rule 7: thread-boundary
+# ---------------------------------------------------------------------------
+
+class ThreadBoundaryRule(Rule):
+    rule_id = "thread-boundary"
+    doc = ("Pipelined-serving stage discipline (DESIGN.md §13): a "
+           "@device_stage function never calls ops.device_get (the counted "
+           "sync belongs to the finalizer thread) and never parks a device "
+           "value on self — in-flight payloads cross threads only inside a "
+           "PendingBatch riding the bounded backlog queue.")
+
+    # calls whose results carry device values in a device-stage function:
+    # counted kernel entry points and the split-protocol launch
+    _DEVICEY_METHODS = {"launch_batch"}
+
+    @staticmethod
+    def _stage(fn: ast.AST) -> Optional[str]:
+        for d in getattr(fn, "decorator_list", []):
+            name = _dotted(d) or ""
+            short = name.rsplit(".", 1)[-1]
+            if short == "device_stage":
+                return "device"
+            if short == "finalizer_stage":
+                return "finalize"
+        return None
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        if not _in_repro(ctx.posix) or "/analysis/" in ctx.posix:
+            return []
+        findings: list[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and self._stage(node) == "device":
+                findings.extend(self._check_device(ctx, node))
+        return findings
+
+    def _check_device(self, ctx: FileContext, fn: ast.AST) -> list[Finding]:
+        findings: list[Finding] = []
+        tainted: set[str] = set()
+
+        def is_tainted(e: ast.AST) -> bool:
+            if isinstance(e, ast.Name):
+                return e.id in tainted
+            if isinstance(e, ast.Call):
+                fname = _dotted(e.func) or ""
+                short = fname.rsplit(".", 1)[-1]
+                if fname.startswith("ops.") and short not in _OPS_HOST_FNS:
+                    return True
+                if short in self._DEVICEY_METHODS:
+                    return True
+                return (any(is_tainted(a) for a in e.args)
+                        or any(is_tainted(k.value) for k in e.keywords))
+            if isinstance(e, (ast.Tuple, ast.List)):
+                return any(is_tainted(x) for x in e.elts)
+            if isinstance(e, (ast.Attribute, ast.Subscript, ast.Starred)):
+                return is_tainted(e.value)
+            return False
+
+        # two monotone passes converge name taint (use-before-def in loops)
+        for _ in range(2):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and is_tainted(node.value):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            tainted.add(tgt.id)
+                        elif isinstance(tgt, (ast.Tuple, ast.List)):
+                            for e in tgt.elts:
+                                if isinstance(e, ast.Name):
+                                    tainted.add(e.id)
+
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                fname = _dotted(node.func) or ""
+                if fname.rsplit(".", 1)[-1] == "device_get":
+                    findings.append(self.finding(
+                        ctx, node, "ops.device_get in a @device_stage "
+                        "function — the counted host sync belongs to the "
+                        "finalizer thread; hand the in-flight payload across "
+                        "the backlog queue instead"))
+            elif isinstance(node, ast.Assign):
+                if not is_tainted(node.value):
+                    continue
+                for tgt in node.targets:
+                    base = tgt.value if isinstance(tgt, ast.Subscript) else tgt
+                    if isinstance(base, ast.Attribute) \
+                            and isinstance(base.value, ast.Name) \
+                            and base.value.id == "self":
+                        findings.append(self.finding(
+                            ctx, node, f"device value parked on "
+                            f"'self.{base.attr}' in a @device_stage function "
+                            "— device values cross threads only through the "
+                            "bounded backlog queue (put a PendingBatch, not "
+                            "an attribute)"))
+        return findings
+
+
 ALL_RULES: tuple[Rule, ...] = (
     HostSyncRule(), UncountedLaunchRule(), RawShardMapRule(), SentinelRule(),
-    LockDisciplineRule(), RegistryHygieneRule(),
+    LockDisciplineRule(), RegistryHygieneRule(), ThreadBoundaryRule(),
 )

@@ -72,6 +72,7 @@ def _prune_hierarchy_jit(
     Returns:
       (n_leaves,) bool — leaves whose MBR intersects the query box.
     """
+    ops.note_trace("prune_hierarchy")
     active = None
     for lo, hi in zip(levels_lo, levels_hi):
         overlap = jnp.all(jnp.logical_and(hi >= qlo, lo <= qhi), axis=0)
@@ -107,6 +108,7 @@ def _prune_hierarchy_batch_jit(
     Returns:
       (Q, n_leaves) bool — per-query leaf survivors.
     """
+    ops.note_trace("prune_hierarchy_batch")
     active = None
     for lo, hi in zip(levels_lo, levels_hi):
         overlap = jnp.all(
@@ -194,6 +196,33 @@ def reduce_visits_batch(
     tombstones gather per visited block and AND into the visit masks, the
     delta block scans with the batch bounds, and the spec merges the halves.
     """
+    payload, fin = launch_visits_batch(data_dev, query_ids, block_ids, batch,
+                                       tile_n, n_queries, spec, n, perm=perm,
+                                       delta=delta)
+    return fin(ops.device_get(payload) if payload is not None else None)
+
+
+def launch_visits_batch(
+    data_dev: jax.Array,
+    query_ids: np.ndarray,
+    block_ids: np.ndarray,
+    batch: T.QueryBatch,
+    tile_n: int,
+    n_queries: int,
+    spec: T.ResultSpec,
+    n: int,
+    perm: np.ndarray | None = None,
+    delta=None,
+) -> tuple:
+    """Device half of ``reduce_visits_batch``: one launch, no host sync.
+
+    Returns ``(payload, finalize)``; the caller owns the single counted
+    ``ops.device_get(payload)`` and hands its host value to ``finalize`` —
+    which is what lets the pipelined server run the sync + host finalizers on
+    a different thread from the launch. ``payload`` is ``None`` (and the
+    host value ignored) when nothing pruned through on a frozen dataset —
+    that corner has no device work at all.
+    """
     dview = delta if delta is not None and not delta.is_empty else None
     dcm = dview.device_cm(tile_n) if dview is not None else None
     if query_ids.size == 0:
@@ -202,13 +231,17 @@ def reduce_visits_batch(
         # dataset); the normal non-empty-visit case stays at one launch.
         base = [spec.empty_result(n) for _ in range(n_queries)]
         if dcm is None:
-            return base
+            return None, lambda _host: base
         lo_d, up_d = ops.batch_bounds_device(batch, dcm.shape[0], dcm.dtype,
                                              q_pad=_next_pow2(len(batch)))
         payload = ops.multi_scan_reduce(dcm, lo_d, up_d, spec=spec,
                                         tile_n=tile_n)
-        dres = spec.finalize(ops.device_get(payload), n_queries, dview.d)
-        return spec.merge_delta(base, dres, dview.host_ctx())
+        d_n, host_ctx = dview.d, dview.host_ctx()
+
+        def finalize_empty(host_payload):
+            dres = spec.finalize(host_payload, n_queries, d_n)
+            return spec.merge_delta(base, dres, host_ctx)
+        return payload, finalize_empty
     tomb = None
     if dview is not None:
         key = None if perm is None else ("perm", id(perm),
@@ -237,11 +270,17 @@ def reduce_visits_batch(
         qids=query_ids.astype(np.int32), bids=block_ids.astype(np.int32),
         tile_n=tile_n, n=n, n_queries=n_queries, perm=perm)
     if dcm is None:
-        return spec.finalize_visits(ops.device_get(payload), vctx)
-    base_host, delta_host = ops.device_get(payload)
-    base = spec.finalize_visits(base_host, vctx)
-    dres = spec.finalize(delta_host, n_queries, dview.d)
-    return spec.merge_delta(base, dres, dview.host_ctx())
+        def finalize(host_payload):
+            return spec.finalize_visits(host_payload, vctx)
+        return payload, finalize
+    d_n, host_ctx = dview.d, dview.host_ctx()
+
+    def finalize_delta(host_payload):
+        base_host, delta_host = host_payload
+        base = spec.finalize_visits(base_host, vctx)
+        dres = spec.finalize(delta_host, n_queries, d_n)
+        return spec.merge_delta(base, dres, host_ctx)
+    return payload, finalize_delta
 
 
 def scatter_visit_results(
@@ -317,7 +356,8 @@ class BlockedIndex:
     def query_leaf_mask(self, q: T.RangeQuery) -> np.ndarray:
         """Phase 1: (n_leaves,) bool survivors of the hierarchy prune."""
         qlo, qhi = ops.query_bounds_device(q, self.m, jnp.float32)
-        mask = prune_hierarchy(self.levels_lo, self.levels_hi, qlo, qhi, self.fanout)
+        mask = prune_hierarchy(self.levels_lo, self.levels_hi, qlo, qhi,
+                               fanout=self.fanout)
         return ops.device_get(mask)
 
     def query(self, q: T.RangeQuery) -> np.ndarray:
@@ -358,6 +398,34 @@ class BlockedIndex:
         # padding visits (id -1, clamped to block 0) are sliced off on device
         return int(ops.device_get(jnp.sum(masks[: survivors.size] != 0)))
 
+    def launch_batch(self, batch: T.QueryBatch, spec: T.ResultSpec = T.IDS,
+                     delta=None) -> tuple:
+        """Device half of the batched two-phase query -> (payload, finalize).
+
+        The prune phase is inherently a mid-stage sync (the surviving
+        (query, block) pairs decide the visit launch's shapes), so it runs
+        here — in the device stage — along with the fused visit *launch*;
+        what the returned ``finalize`` defers to the caller's thread is the
+        payload sync + the spec's host finalizers, the host-heavy tail.
+        ``payload`` is None (host value ignored) when nothing pruned through
+        on a frozen dataset.
+        """
+        spec = T.validate_mode(spec).validate(self.m)
+        q_n = len(batch)
+        q_pad = _next_pow2(q_n)  # pow2 query bucket bounds jit retraces
+        qlo, qhi = batch.bounds_columnar(self.m, q_pad)
+        leaf_mask = ops.device_get(prune_hierarchy_batch(
+            self.levels_lo, self.levels_hi,
+            jnp.asarray(qlo), jnp.asarray(qhi), fanout=self.fanout,
+        ))[:q_n]  # (Q, n_leaves); padding queries are match-all -> dropped
+        qids, bids = np.nonzero(leaf_mask)
+        self.last_visited_blocks = int(qids.size)
+        return launch_visits_batch(
+            self.data_dev, qids.astype(np.int32), bids.astype(np.int32),
+            batch, self.tile_n, q_n, spec, self.n, perm=self.perm,
+            delta=delta,
+        )
+
     def query_batch(self, batch: T.QueryBatch, spec: T.ResultSpec = T.IDS,
                     delta=None) -> list:
         """Batched two-phase query: one counted prune launch (+ its
@@ -372,21 +440,8 @@ class BlockedIndex:
         host-sync counters (mdrqlint's host-sync rule keeps it that way). Positions map through ``perm`` in the
         spec's finalizer (counts and aggregates are permutation-invariant).
         """
-        spec = T.validate_mode(spec).validate(self.m)
-        q_n = len(batch)
-        q_pad = _next_pow2(q_n)  # pow2 query bucket bounds jit retraces
-        qlo, qhi = batch.bounds_columnar(self.m, q_pad)
-        leaf_mask = ops.device_get(prune_hierarchy_batch(
-            self.levels_lo, self.levels_hi,
-            jnp.asarray(qlo), jnp.asarray(qhi), self.fanout,
-        ))[:q_n]  # (Q, n_leaves); padding queries are match-all -> dropped
-        qids, bids = np.nonzero(leaf_mask)
-        self.last_visited_blocks = int(qids.size)
-        return reduce_visits_batch(
-            self.data_dev, qids.astype(np.int32), bids.astype(np.int32),
-            batch, self.tile_n, q_n, spec, self.n, perm=self.perm,
-            delta=delta,
-        )
+        payload, fin = self.launch_batch(batch, spec=spec, delta=delta)
+        return fin(ops.device_get(payload) if payload is not None else None)
 
 
 def finish_build(

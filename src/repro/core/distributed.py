@@ -120,6 +120,7 @@ def _distributed_mask_jit(
     tile_n: int = 1024,
     interpret: bool | None = None,
 ) -> jax.Array:
+    ops.note_trace("distributed_mask")
     if interpret is None:
         interpret = ops.default_interpret()
 
@@ -153,6 +154,7 @@ def _distributed_count_jit(
     tile_n: int = 1024,
     interpret: bool | None = None,
 ) -> jax.Array:
+    ops.note_trace("distributed_count")
     if interpret is None:
         interpret = ops.default_interpret()
 
@@ -188,6 +190,7 @@ def _distributed_multi_mask_jit(
     tile_n: int = 1024,
     interpret: bool | None = None,
 ) -> jax.Array:
+    ops.note_trace("distributed_multi_mask")
     if interpret is None:
         interpret = ops.default_interpret()
 
@@ -222,6 +225,7 @@ def _distributed_multi_counts_jit(
     tile_n: int = 1024,
     interpret: bool | None = None,
 ) -> jax.Array:
+    ops.note_trace("distributed_multi_counts")
     if interpret is None:
         interpret = ops.default_interpret()
 
@@ -263,6 +267,7 @@ def _distributed_multi_reduce_jit(
     tile_n: int = 1024,
     interpret: bool | None = None,
 ):
+    ops.note_trace("distributed_multi_reduce")
     if interpret is None:
         interpret = ops.default_interpret()
 
@@ -393,6 +398,14 @@ class DistributedScan:
         tombstone vector shards with the data axis and ANDs in shard-locally;
         the small delta block replicates and scans outside the shard_map.
         """
+        payload, fin = self.launch_batch(batch, spec=spec, delta=delta)
+        return fin(ops.device_get(payload))
+
+    def launch_batch(self, batch, spec=T.IDS, delta=None) -> tuple:
+        """Device half of ``query_batch`` -> (payload, finalize): the one
+        collective launch without its host sync, for the pipelined server
+        (the counted ``device_get`` + host finalizers run via ``finalize``
+        on the caller's thread)."""
         spec = T.validate_mode(spec).validate(self.m)
         from repro.core.scan import bucketed_batch_bounds
         batch = self._as_batch(batch)
@@ -407,9 +420,16 @@ class DistributedScan:
         payload = distributed_multi_reduce(self.mesh, self.data, lo, up,
                                            dcm, tomb,
                                            spec=spec, tile_n=self.tile_n)
+        n_q, n = len(batch), self.n
         if dcm is None:
-            return spec.finalize(ops.device_get(payload), len(batch), self.n)
-        base_host, delta_host = ops.device_get(payload)
-        base = spec.finalize(base_host, len(batch), self.n)
-        dres = spec.finalize(delta_host, len(batch), delta.d)
-        return spec.merge_delta(base, dres, delta.host_ctx())
+            def finalize(host_payload):
+                return spec.finalize(host_payload, n_q, n)
+            return payload, finalize
+        d_n, host_ctx = delta.d, delta.host_ctx()
+
+        def finalize_delta(host_payload):
+            base_host, delta_host = host_payload
+            base = spec.finalize(base_host, n_q, n)
+            dres = spec.finalize(delta_host, n_q, d_n)
+            return spec.merge_delta(base, dres, host_ctx)
+        return payload, finalize_delta

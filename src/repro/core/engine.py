@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
+from repro.kernels import ops
 from repro.core import types as T
 from repro.core import delta as delta_mod
 from repro.core import scan as scan_mod
@@ -94,6 +95,58 @@ class BatchStats:
 def _n_results(spec: T.ResultSpec, results: Sequence) -> int:
     """Total result magnitude across per-query results, typed by the spec."""
     return int(sum(spec.result_size(r) for r in results))
+
+
+@dataclasses.dataclass
+class PendingBatch:
+    """An in-flight batch: device work launched, host finalization deferred.
+
+    Produced by ``MDRQEngine.launch_batch`` (the device stage of a split
+    ``query_batch``); ``finalize()`` — run later, possibly on another thread
+    — performs each bucket's single counted ``ops.device_get`` and the spec's
+    host finalizers, returning the per-query results positionally aligned
+    with the input. Everything the finalize needs was captured at launch time
+    (the state version, the delta snapshot inside each finalize closure), so
+    a concurrent ingest or compaction swap cannot mix versions mid-batch.
+
+    ``stats`` is filled by ``finalize()`` but deliberately NOT written to
+    ``engine.last_batch_stats``: with several batches in flight the engine-
+    level "last" slot would interleave nondeterministically; the pipelined
+    server aggregates per-window stats itself.
+    """
+
+    n_queries: int
+    spec: T.ResultSpec
+    methods: list[str]
+    method_counts: dict[str, int]
+    plan_seconds: float
+    launch_seconds: float
+    version: int
+    # per-bucket (input positions, in-flight device payload | None, finalize)
+    _parts: list = dataclasses.field(default_factory=list)
+    stats: Optional[BatchStats] = None
+
+    def finalize(self) -> list:
+        """Host stage: sync each bucket's payload, run the host finalizers,
+        scatter per-query results back to input order. Idempotent only in
+        the sense that ``stats`` records the *last* call; call once."""
+        t0 = time.perf_counter()
+        results: list = [None] * self.n_queries
+        for idxs, payload, fin in self._parts:
+            host = ops.device_get(payload) if payload is not None else None
+            out = fin(host)
+            for k, res in zip(idxs, out):
+                results[k] = res
+        dt = time.perf_counter() - t0
+        self.stats = BatchStats(
+            n_queries=self.n_queries,
+            seconds=self.plan_seconds + self.launch_seconds + dt,
+            method_counts=dict(self.method_counts),
+            n_results=_n_results(self.spec, results),
+            plan_seconds=self.plan_seconds,
+            methods=list(self.methods),
+        )
+        return results
 
 
 def _lookup_path(paths: dict, method: str) -> paths_mod.AccessPath:
@@ -370,6 +423,103 @@ class MDRQEngine:
                 return path.query_batch(sub, spec.kind)
         raise ValueError(f"path {path.name!r} predates the ResultSpec "
                          f"protocol and cannot serve spec {spec.kind!r}")
+
+    @staticmethod
+    def _path_supports_launch(path, delta) -> bool:
+        """Whether this bucket can use the split launch/finalize protocol.
+
+        Registered paths without ``launch_batch`` (or whose ``launch_batch``
+        predates the spec/delta parameters) fall back to synchronous
+        execution inside the device stage — correct, just not overlapped.
+        """
+        if not paths_mod.supports_launch(path):
+            return False
+        lb = path.launch_batch
+        if not paths_mod.takes_spec(lb):
+            return False
+        if delta is not None and not paths_mod.takes_delta(lb):
+            return False
+        return True
+
+    def launch_batch(
+        self,
+        queries: Union[T.QueryBatch, Sequence[T.RangeQuery]],
+        method: str = "auto",
+        spec: Optional[T.ResultSpec] = None,
+        mode: Optional[str] = None,
+    ) -> PendingBatch:
+        """Device stage of a split ``query_batch`` -> a ``PendingBatch``.
+
+        Plans the batch and issues every bucket's fused launch without
+        synchronizing; the returned ``PendingBatch.finalize()`` performs the
+        deferred host syncs + spec finalizers (one counted ``device_get`` per
+        bucket — the same budget as the synchronous path) and may run on
+        another thread. State and delta snapshot are captured here, once:
+        in-flight batches finalize on the version they launched against, so
+        ingest/compaction stays atomic while a batch is in flight
+        (DESIGN.md §13). Buckets whose path lacks the split protocol execute
+        synchronously inside this call (their results ride a pre-finalized
+        part). ``finalize()`` fills ``PendingBatch.stats`` but never touches
+        ``engine.last_batch_stats``.
+        """
+        state = self._state
+        spec = T.resolve_spec(spec, mode)
+        if isinstance(queries, T.QueryBatch):
+            batch = queries
+        else:
+            queries = list(queries)
+            batch = T.QueryBatch.from_queries(queries) if queries else None
+        if batch is None or len(batch) == 0:
+            return PendingBatch(0, spec, [], {}, 0.0, 0.0, state.version)
+        if batch.m != state.dataset.m:
+            raise ValueError(f"batch dims {batch.m} != dataset dims "
+                             f"{state.dataset.m}")
+        spec.validate(state.dataset.m)
+        dview = state.delta.snapshot()
+        delta_arg = None if dview.is_empty else dview
+
+        t0 = time.perf_counter()
+        with obs_tracing.span("plan", n_queries=len(batch)):
+            state.planner.model.delta_n = dview.d
+            if method == "auto":
+                bp = state.planner.plan_batch(batch, spec=spec)
+                methods = bp.methods
+            else:
+                _lookup_path(state.paths, method)  # raise before work
+                methods = [method] * len(batch)
+        t1 = time.perf_counter()
+
+        buckets: dict[str, list[int]] = {}
+        for k, meth in enumerate(methods):
+            buckets.setdefault(meth, []).append(k)
+
+        pending = PendingBatch(
+            n_queries=len(batch), spec=spec, methods=list(methods),
+            method_counts={m: len(ix) for m, ix in buckets.items()},
+            plan_seconds=t1 - t0, launch_seconds=0.0, version=state.version)
+        for meth, idxs in buckets.items():
+            sub = T.QueryBatch(batch.lower[idxs], batch.upper[idxs])
+            path = _lookup_path(state.paths, meth)
+            with obs_tracing.span("execute", path=meth, bucket=len(idxs),
+                                  stage="launch"):
+                if self._path_supports_launch(path, delta_arg):
+                    payload, fin = path.launch_batch(sub, spec=spec,
+                                                     delta=delta_arg)
+                else:
+                    out = self._path_query_batch(path, sub, spec,
+                                                 delta=delta_arg)
+                    payload, fin = None, (lambda _h, _out=out: _out)
+            pending._parts.append((idxs, payload, fin))
+        pending.launch_seconds = time.perf_counter() - t1
+
+        reg = obs_metrics.registry()
+        reg.counter("mdrq_query_batches_total",
+                    help="query_batch executions").inc()
+        for meth, idxs in buckets.items():
+            reg.counter("mdrq_queries_total",
+                        help="queries served, by access path",
+                        path=meth).inc(len(idxs))
+        return pending
 
     def query(self, q: T.RangeQuery, method: str = "auto",
               spec: Optional[T.ResultSpec] = None,

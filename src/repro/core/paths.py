@@ -41,17 +41,32 @@ from repro.obs import tracing as obs_tracing
 from repro.core import types as T
 
 
-def _path_span(path, batch, spec):
+def _path_span(path, batch, spec, stage: str | None = None):
     """Span around one adapter batch execution.
 
     Returns the shared ``NULL_SPAN`` singleton unless a tracer is active —
     the ``enabled()`` guard also skips building the attrs dict, so the
-    disabled hot path allocates nothing.
+    disabled hot path allocates nothing. ``stage="launch"`` marks the
+    device-stage half of a split execution (the span deliberately does NOT
+    block on the output — it measures dispatch, not compute).
     """
     if not obs_tracing.enabled():
         return obs_tracing.NULL_SPAN
+    if stage is None:
+        return obs_tracing.span("path", path=path.name, n_queries=len(batch),
+                                spec=getattr(spec, "kind", str(spec)))
     return obs_tracing.span("path", path=path.name, n_queries=len(batch),
-                            spec=getattr(spec, "kind", str(spec)))
+                            spec=getattr(spec, "kind", str(spec)), stage=stage)
+
+
+def supports_launch(path) -> bool:
+    """Whether a path offers the split-execution protocol:
+    ``launch_batch(batch, spec, delta) -> (payload, finalize)`` where the
+    caller owns the single ``ops.device_get(payload)`` (skipped when payload
+    is None) and ``finalize(host_payload)`` types the per-query results.
+    Paths without it still serve pipelined traffic — their buckets execute
+    synchronously in the device stage."""
+    return callable(getattr(path, "launch_batch", None))
 
 
 @functools.lru_cache(maxsize=None)
@@ -256,6 +271,11 @@ class ColumnarScanPath(ScanCost):
             sp.block_on(out)
         return out
 
+    def launch_batch(self, batch: T.QueryBatch,
+                     spec: T.ResultSpec = T.IDS, delta=None) -> tuple:
+        with _path_span(self, batch, spec, stage="launch"):
+            return self._scan.launch_batch(batch, spec=spec, delta=delta)
+
 
 class DistributedScanPath(ScanCost):
     """``DistributedScan`` as the "scan" path — one collective launch per
@@ -284,6 +304,11 @@ class DistributedScanPath(ScanCost):
             out = self._dist.query_batch(batch, spec=spec, delta=delta)
             sp.block_on(out)
         return out
+
+    def launch_batch(self, batch: T.QueryBatch,
+                     spec: T.ResultSpec = T.IDS, delta=None) -> tuple:
+        with _path_span(self, batch, spec, stage="launch"):
+            return self._dist.launch_batch(batch, spec=spec, delta=delta)
 
 
 class VerticalScanPath(VerticalScanCost):
@@ -320,6 +345,12 @@ class VerticalScanPath(VerticalScanCost):
             sp.block_on(out)
         return out
 
+    def launch_batch(self, batch: T.QueryBatch,
+                     spec: T.ResultSpec = T.IDS, delta=None) -> tuple:
+        with _path_span(self, batch, spec, stage="launch"):
+            return self._scan_ref().launch_batch(batch, partial=True,
+                                                 spec=spec, delta=delta)
+
 
 class BlockedIndexPath(TreeCost):
     """A ``BlockedIndex`` (kd-tree or packed STR R*-tree) as a path."""
@@ -347,6 +378,11 @@ class BlockedIndexPath(TreeCost):
             out = self._index.query_batch(batch, spec=spec, delta=delta)
             sp.block_on(out)
         return out
+
+    def launch_batch(self, batch: T.QueryBatch,
+                     spec: T.ResultSpec = T.IDS, delta=None) -> tuple:
+        with _path_span(self, batch, spec, stage="launch"):
+            return self._index.launch_batch(batch, spec=spec, delta=delta)
 
 
 class VAFilePath(VAFileCost):
@@ -376,6 +412,11 @@ class VAFilePath(VAFileCost):
             out = self._vafile.query_batch(batch, spec=spec, delta=delta)
             sp.block_on(out)
         return out
+
+    def launch_batch(self, batch: T.QueryBatch,
+                     spec: T.ResultSpec = T.IDS, delta=None) -> tuple:
+        with _path_span(self, batch, spec, stage="launch"):
+            return self._vafile.launch_batch(batch, spec=spec, delta=delta)
 
 
 class PerQueryPath:

@@ -152,6 +152,23 @@ class ColumnarScan:
         the delta block scans with the same bounds, and the spec merges the
         two finalized halves — still one launch + one host sync.
         """
+        payload, fin = self.launch_batch(batch, partial=partial, spec=spec,
+                                         delta=delta)
+        return fin(ops.device_get(payload))
+
+    def launch_batch(self, batch: T.QueryBatch, partial: bool = False,
+                     spec: T.ResultSpec = T.IDS, delta=None):
+        """Device half of ``query_batch``: issue the one fused launch and
+        return ``(payload, finalize)`` without synchronizing.
+
+        ``payload`` is the in-flight device value; ``finalize(host_payload)``
+        — where ``host_payload`` is the caller's single counted
+        ``ops.device_get(payload)`` — runs the spec's host finalizer (and the
+        delta merge) and types the per-query results. The split is what the
+        pipelined server overlaps: batch k+1 launches while batch k's
+        finalize runs on another thread; composing the halves back-to-back is
+        exactly the synchronous path with an unchanged launch/sync budget.
+        """
         spec = T.validate_mode(spec).validate(self.m)
         q_pad, lo, up = bucketed_batch_bounds(batch, self.data_dev.shape[0],
                                               self.data_dev.dtype)
@@ -167,12 +184,19 @@ class ColumnarScan:
         else:
             payload = ops.multi_scan_reduce(self.data_dev, lo, up, dcm, tomb,
                                             spec=spec, tile_n=self.tile_n)
+        n_q, n, d_n = len(batch), self.n, delta.d if dcm is not None else 0
         if dcm is None:
-            return spec.finalize(ops.device_get(payload), len(batch), self.n)
-        base_host, delta_host = ops.device_get(payload)
-        base = spec.finalize(base_host, len(batch), self.n)
-        dres = spec.finalize(delta_host, len(batch), delta.d)
-        return spec.merge_delta(base, dres, delta.host_ctx())
+            def finalize(host_payload):
+                return spec.finalize(host_payload, n_q, n)
+        else:
+            host_ctx = delta.host_ctx()
+
+            def finalize(host_payload):
+                base_host, delta_host = host_payload
+                base = spec.finalize(base_host, n_q, n)
+                dres = spec.finalize(delta_host, n_q, d_n)
+                return spec.merge_delta(base, dres, host_ctx)
+        return payload, finalize
 
 
 def build_columnar_scan(dataset: T.Dataset, tile_n: int = 1024) -> ColumnarScan:
@@ -221,6 +245,7 @@ def build_row_scan(dataset: T.Dataset, tile_rows: int = 512) -> RowScan:
 @jax.jit
 def _xla_scan_mask_jit(data_cm: jax.Array, qlo: jax.Array,
                        qhi: jax.Array) -> jax.Array:
+    ops.note_trace("xla_scan_mask")
     ok = jnp.logical_and(data_cm >= qlo, data_cm <= qhi)
     return jnp.all(ok, axis=0)
 

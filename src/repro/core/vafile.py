@@ -142,7 +142,7 @@ class VAFile:
         qlo[: self.m, 0] = cell_lo
         qhi[: self.m, 0] = cell_hi
         cand = ops.device_get(ops.va_filter(
-            self.packed_dev, jnp.asarray(qlo), jnp.asarray(qhi), self.m,
+            self.packed_dev, jnp.asarray(qlo), jnp.asarray(qhi), m=self.m,
             tile_n=self.tile_n,
         )) > 0
         self.last_candidate_frac = float(cand[: self.n].mean())
@@ -166,7 +166,7 @@ class VAFile:
         cell_lo, cell_hi = self.query_cells_batch(batch, q_pad)
         block_any = ops.multi_va_filter(
             self.packed_dev, jnp.asarray(cell_lo), jnp.asarray(cell_hi),
-            self.m, tile_n=self.tile_n, block_n=self.tile_n,
+            m=self.m, tile_n=self.tile_n, block_n=self.tile_n,
         )
         surv = ops.device_get(block_any)[:q_n]  # padding queries drop
         qids, bids = np.nonzero(surv)
@@ -184,13 +184,27 @@ class VAFile:
         payload across the second sync. All per-query dispatch and readback
         taxes amortize over the batch.
         """
-        from repro.core.blockindex import reduce_visits_batch
+        payload, fin = self.launch_batch(batch, spec=spec, delta=delta)
+        return fin(ops.device_get(payload) if payload is not None else None)
+
+    def launch_batch(self, batch: T.QueryBatch, spec: T.ResultSpec = T.IDS,
+                     delta=None) -> tuple:
+        """Device half of the batched two-phase query -> (payload, finalize).
+
+        Phase 1 (the packed filter + its small survivor-bits sync — a
+        shape-deciding mid-stage sync, like the tree's prune) and the fused
+        visit *launch* run here; the returned ``finalize`` defers the payload
+        sync + host finalizers to the caller (the pipelined server's
+        finalizer thread). ``payload`` is None when no block survived on a
+        frozen dataset.
+        """
+        from repro.core.blockindex import launch_visits_batch
 
         spec = T.validate_mode(spec).validate(self.m)
         q_n = len(batch)
         qids, bids = self._candidate_blocks_batch(batch)
         self.last_visited_blocks = int(qids.size)
-        return reduce_visits_batch(
+        return launch_visits_batch(
             self.data_dev, qids, bids, batch, self.tile_n, q_n, spec,
             self.n, perm=None, delta=delta,
         )

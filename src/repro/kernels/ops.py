@@ -18,9 +18,19 @@ implementation — and ``device_get`` is the counted device->host transfer
 point. Tests use the counters to assert launch/sync budgets (e.g. "one
 phase-1 launch and one host sync per VA-file batch") that wall-clock
 measurements on CPU cannot see.
+
+AOT serving cache: inside ``aot_capture()`` every counted call additionally
+``jit_fn.lower(...).compile()``s its executable and stores it keyed by
+(op, arg shapes/dtypes, statics); afterwards calls whose key is cached
+dispatch straight to the compiled executable — no jit argument hashing, and
+*provably* no retrace (the ``note_trace`` probe sits first in every jitted
+body, so a retrace is observable as a log entry rather than inferred from
+timing). ``serve.pipeline`` warms this cache at server construction; the
+counters still see every call because the bump happens before the lookup.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -61,6 +71,9 @@ def set_backend(name: str) -> str:
     if name != prev:
         _BACKEND = name
         jax.clear_caches()
+        # AOT executables bake the backend at trace time exactly like the jit
+        # caches do — a stale one would silently serve the old backend.
+        clear_aot_cache()
     return prev
 
 
@@ -111,8 +124,11 @@ def counter(name: str) -> int:
 
 
 def counters() -> dict[str, int]:
-    """Nonzero per-op launch counts since the last reset."""
-    return {name: int(c.value) for name, c in _COUNTERS.items() if c.value}
+    """Nonzero per-op launch counts since the last reset. AOT cache events
+    ride the same store (for registry-reset liveness) but report through
+    ``aot_counters`` — launch-budget equality assertions stay exact."""
+    return {name: int(c.value) for name, c in _COUNTERS.items()
+            if c.value and not name.startswith("aot:")}
 
 
 def reset_counters() -> None:
@@ -133,16 +149,152 @@ def device_get(x):
     return np.asarray(x)
 
 
+# -- retrace observability ----------------------------------------------------
+# ``note_trace(op)`` is the first statement of every jitted implementation
+# body: it runs when (and only when) jax traces the function — never per
+# execution — so ``trace_log()`` is a direct record of (re)compilations. The
+# serving pipeline's "zero retraces after warmup" guarantee is asserted on
+# this log, not inferred from wall time.
+
+_TRACE_LOG: list[str] = []
+
+
+def note_trace(name: str) -> None:
+    """Trace-time probe (call first inside a jitted body)."""
+    _TRACE_LOG.append(name)
+
+
+def trace_log() -> tuple[str, ...]:
+    """Op names in (re)trace order since the last ``reset_trace_log``."""
+    return tuple(_TRACE_LOG)
+
+
+def reset_trace_log() -> None:
+    _TRACE_LOG.clear()
+
+
+# -- AOT executable cache -----------------------------------------------------
+# (op name, per-arg (shape, dtype) abstraction, statics) -> the compiled
+# executable from ``jit_fn.lower(...).compile()``. A hit bypasses the jit
+# dispatch entirely (``exe(*args)`` — statics are baked in), so a warmed
+# serving path cannot retrace no matter what jax's own caches do. Population
+# only happens inside ``aot_capture()`` (the server warmup pass); outside it
+# the cache is read-only, and the lookup itself costs one tuple build + one
+# dict get per call. Reads are GIL-safe from any thread; capture is expected
+# single-threaded (one warmup pass).
+
+_AOT_CACHE: dict = {}
+_AOT_CAPTURE: bool = False
+_AOT_FAMILY = "mdrq_aot_total"
+_AOT_HELP = ("AOT executable cache events: compile (warmup capture), hit "
+             "(dispatched to a compiled executable), miss (warmed process "
+             "fell back to jit dispatch)")
+
+
+def _aot_bump(event: str) -> None:
+    key = "aot:" + event
+    c = _COUNTERS.get(key)
+    if c is None:
+        c = _obs_metrics.registry().counter(_AOT_FAMILY, help=_AOT_HELP,
+                                            event=event)
+        _COUNTERS[key] = c
+    c.inc()
+
+
+def _abstract(x):
+    """Hashable cache-key atom for one call argument: arrays collapse to
+    (shape, dtype) — exactly what decides a retrace — statics stay as-is."""
+    if x is None:
+        return None
+    if isinstance(x, (tuple, list)):
+        return ("seq", type(x).__name__, tuple(_abstract(e) for e in x))
+    shape = getattr(x, "shape", None)
+    dtype = getattr(x, "dtype", None)
+    if shape is not None and dtype is not None:
+        return ("arr", tuple(shape), str(dtype))
+    return ("static", x)
+
+
+def _aot_key(name: str, args: tuple, kwargs: dict):
+    return (name, tuple(_abstract(a) for a in args),
+            tuple(sorted((k, _abstract(v)) for k, v in kwargs.items())))
+
+
+@contextlib.contextmanager
+def aot_capture():
+    """Within this context every counted call lower+compiles (and caches) its
+    executable on a key miss. The call still executes and returns normally —
+    warmup doubles as a correctness-visible dry run."""
+    global _AOT_CAPTURE
+    prev = _AOT_CAPTURE
+    _AOT_CAPTURE = True
+    try:
+        yield
+    finally:
+        _AOT_CAPTURE = prev
+
+
+def aot_cache_size() -> int:
+    return len(_AOT_CACHE)
+
+
+def aot_cache_keys() -> tuple:
+    return tuple(_AOT_CACHE)
+
+
+def clear_aot_cache() -> None:
+    _AOT_CACHE.clear()
+
+
+def aot_counters() -> dict[str, int]:
+    """Nonzero AOT cache event counts ("compile" / "hit" / "miss")."""
+    out = {}
+    for key, c in _COUNTERS.items():
+        if key.startswith("aot:") and c.value:
+            out[key[4:]] = int(c.value)
+    return out
+
+
 def counted(name: str, doc: str):
-    """Build a public op: bump the named launch counter, delegate to the
-    jitted implementation. One definition keeps every op in the accounting —
-    a hand-written wrapper that forgets the bump silently escapes it. Other
-    modules that own jitted entry points (e.g. ``core.distributed``) register
-    them through this same hook so no launch path escapes the counters."""
+    """Build a public op: bump the named launch counter, consult the AOT
+    executable cache, and otherwise delegate to the jitted implementation.
+    One definition keeps every op in the accounting — a hand-written wrapper
+    that forgets the bump silently escapes it. Other modules that own jitted
+    entry points (e.g. ``core.distributed``) register them through this same
+    hook so no launch path escapes the counters — and so every op is AOT
+    warmable for free."""
     def deco(jit_fn):
         def wrapper(*args, **kwargs):
             _bump(name)
-            return jit_fn(*args, **kwargs)
+            try:
+                key = _aot_key(name, args, kwargs)
+                exe = _AOT_CACHE.get(key)
+            except TypeError:  # unhashable static — not AOT-cacheable
+                return jit_fn(*args, **kwargs)
+            if exe is None:
+                if not _AOT_CAPTURE:
+                    if _AOT_CACHE:
+                        # a warmed process fell off the compiled set — the
+                        # "zero retraces" budget tests watch this counter
+                        _aot_bump("miss")
+                    return jit_fn(*args, **kwargs)
+                exe = jit_fn.lower(*args, **kwargs).compile()
+                try:
+                    # convention check before caching: executables take the
+                    # dynamic args positionally with statics baked in, so a
+                    # call site passing a static *positionally* produces an
+                    # executable we cannot redispatch to — skip it (the op
+                    # still works through jit; fix the call site to pass
+                    # statics as keywords to make it AOT-cacheable)
+                    out = exe(*args)
+                except TypeError:
+                    return jit_fn(*args, **kwargs)
+                _AOT_CACHE[key] = exe
+                _aot_bump("compile")
+                return out
+            else:
+                _aot_bump("hit")
+            return exe(*args)
         wrapper.__name__ = wrapper.__qualname__ = name
         wrapper.__doc__ = doc
         wrapper.__wrapped__ = jit_fn
@@ -209,6 +361,7 @@ def _range_scan_jit(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
+    note_trace("range_scan")
     if use_xla():
         return _ref.range_scan_ref(data_cm, lower, upper)
     if interpret is None:
@@ -234,6 +387,7 @@ def _range_scan_visit_jit(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
+    note_trace("range_scan_visit")
     if use_xla():
         m_pad, n_pad = data_cm.shape
         blocks = data_cm.reshape(m_pad, n_pad // tile_n, tile_n).transpose(1, 0, 2)
@@ -262,6 +416,7 @@ def _range_scan_vertical_jit(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
+    note_trace("range_scan_vertical")
     if use_xla():
         rows = data_cm[dim_ids]  # touch only the queried dimensions' columns
         return _ref.range_scan_ref(rows, lower[dim_ids, 0], upper[dim_ids, 0])
@@ -287,6 +442,7 @@ def _multi_range_scan_jit(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
+    note_trace("multi_range_scan")
     if use_xla():
         return _ref.multi_scan_ref(data_cm, lower, upper)
     if interpret is None:
@@ -312,6 +468,7 @@ def _multi_range_scan_vertical_jit(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
+    note_trace("multi_range_scan_vertical")
     if use_xla():
         return _ref.multi_scan_vertical_ref(data_cm, dim_ids, lower, upper)
     if interpret is None:
@@ -338,6 +495,7 @@ def _multi_range_scan_visit_jit(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
+    note_trace("multi_range_scan_visit")
     if use_xla():
         m_pad, n_pad = data_cm.shape
         blocks = data_cm.reshape(m_pad, n_pad // tile_n, tile_n).transpose(1, 0, 2)
@@ -366,6 +524,7 @@ def _range_scan_rows_jit(
     tile_rows: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
+    note_trace("range_scan_rows")
     if use_xla():
         ok = jnp.logical_and(data_rm >= lower, data_rm <= upper)
         return jnp.all(ok, axis=1).astype(jnp.int8)
@@ -392,6 +551,7 @@ def _va_filter_jit(
     tile_n: int = _va.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ) -> jax.Array:
+    note_trace("va_filter")
     if use_xla():
         return _ref.va_filter_packed_ref(packed, cell_lo[:, 0], cell_hi[:, 0], m)
     if interpret is None:
@@ -418,6 +578,7 @@ def _multi_va_filter_jit(
     block_n: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
+    note_trace("multi_va_filter")
     if use_xla():
         out = _ref.multi_va_filter_packed_ref(packed, cell_lo, cell_hi, m)
     else:
@@ -491,6 +652,7 @@ def _multi_scan_reduce_jit(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ):
+    note_trace("multi_scan_reduce")
     if interpret is None:
         interpret = default_interpret()
     mask = _multi_scan_masks(data_cm, lower, upper, tile_n=tile_n,
@@ -527,6 +689,7 @@ def _multi_scan_vertical_reduce_jit(
     tile_n: int = _rs.DEFAULT_TILE_N,
     interpret: bool | None = None,
 ):
+    note_trace("multi_scan_vertical_reduce")
     if interpret is None:
         interpret = default_interpret()
     if use_xla():
@@ -571,6 +734,7 @@ def _multi_visit_reduce_jit(
     n_queries: int = 1,
     interpret: bool | None = None,
 ):
+    note_trace("multi_visit_reduce")
     if interpret is None:
         interpret = default_interpret()
     if use_xla():
@@ -606,6 +770,7 @@ multi_visit_reduce = _counted(
 
 @jax.jit
 def _mask_counts_jit(mask: jax.Array) -> jax.Array:
+    note_trace("mask_counts")
     return jnp.sum(mask != 0, axis=-1).astype(jnp.int32)
 
 
@@ -630,6 +795,7 @@ def _kv_visit_attention_jit(
     *,
     interpret: bool | None = None,
 ) -> jax.Array:
+    note_trace("kv_visit_attention")
     from repro.kernels import kv_visit as _kvv
     if use_xla():
         return _ref.kv_visit_attention_ref(q, k_blocks, v_blocks, block_ids, pos)

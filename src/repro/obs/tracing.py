@@ -38,6 +38,7 @@ and Flood-style layout learning both consume exactly these records.
 from __future__ import annotations
 
 import dataclasses
+import threading as _threading
 import time
 from typing import Any, Optional
 
@@ -141,26 +142,30 @@ class _NullSpan:
 
 NULL_SPAN = _NullSpan()
 
-# The active tracer (module global — the process is single-threaded through
-# the engine; an async server would swap this for a contextvar).
-_TRACER: Optional["Tracer"] = None
+# The active tracer, *per thread*. The pipelined server (DESIGN.md §13) runs
+# a dedicated finalizer thread; a process-global tracer would let that
+# thread's spans interleave into the admission thread's span stack and
+# corrupt the tree. Thread-local means: a Tracer installed on one thread
+# sees exactly that thread's spans; other threads' span() calls return
+# NULL_SPAN. (An async server would swap this for a contextvar.)
+_TLS = _threading.local()
 
 
 def enabled() -> bool:
-    return _TRACER is not None
+    return getattr(_TLS, "tracer", None) is not None
 
 
 def span(name: str, **attrs):
-    """Open a span under the active tracer, or the no-op singleton when
-    tracing is disabled."""
-    t = _TRACER
+    """Open a span under the calling thread's active tracer, or the no-op
+    singleton when tracing is disabled on this thread."""
+    t = getattr(_TLS, "tracer", None)
     if t is None:
         return NULL_SPAN
     return Span(t, name, attrs)
 
 
 def current() -> Optional["Tracer"]:
-    return _TRACER
+    return getattr(_TLS, "tracer", None)
 
 
 class Tracer:
@@ -173,14 +178,12 @@ class Tracer:
         self._prev: Optional[Tracer] = None
 
     def __enter__(self) -> "Tracer":
-        global _TRACER
-        self._prev = _TRACER
-        _TRACER = self
+        self._prev = getattr(_TLS, "tracer", None)
+        _TLS.tracer = self
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
-        global _TRACER
-        _TRACER = self._prev
+        _TLS.tracer = self._prev
         self._prev = None
 
     def _push(self, s: Span) -> None:

@@ -3,7 +3,12 @@ throughput-oriented batched MDRQ query server."""
 from repro.serve.serve_step import make_serve_step, make_prefill, greedy_sample
 from repro.serve.batching import BatchServer, Request, admission_query
 from repro.serve.mdrq_server import MDRQServer, ServerStats, Ticket
+from repro.serve.pipeline import (Overloaded, PipelinedMDRQServer,
+                                  PipelineTicket, WarmupReport,
+                                  serve_pipelined)
 
 __all__ = ["make_serve_step", "make_prefill", "greedy_sample",
            "BatchServer", "Request", "admission_query",
-           "MDRQServer", "ServerStats", "Ticket"]
+           "MDRQServer", "ServerStats", "Ticket",
+           "Overloaded", "PipelinedMDRQServer", "PipelineTicket",
+           "WarmupReport", "serve_pipelined"]

@@ -90,7 +90,15 @@ class ServerStats:
     # planning share of busy_seconds (the engine's BatchStats.plan_seconds
     # summed over flushes) — how much of the window went to the batch planner
     plan_seconds: float = 0.0
+    # host-finalize share (pipelined mode: the finalizer thread's stage wall)
+    finalize_seconds: float = 0.0
+    # wall clock from first submit to last finalize (pipelined mode only;
+    # 0.0 on the synchronous server). Under overlap, summing per-stage times
+    # double-counts concurrent work — qps must anchor to real elapsed time.
+    wall_seconds: float = 0.0
     n_results: int = 0
+    # queries shed by admission control, by reason ("overloaded")
+    shed_counts: dict[str, int] = dataclasses.field(default_factory=dict)
     # access-path buckets summed over every flushed batch
     method_counts: dict[str, int] = dataclasses.field(default_factory=dict)
     # served queries bucketed by result-spec kind ("ids", "count", "topk", ...)
@@ -108,7 +116,12 @@ class ServerStats:
 
     @property
     def qps(self) -> float:
-        return self.n_queries / self.busy_seconds if self.busy_seconds > 0 else 0.0
+        """Sustained throughput. Synchronous serving divides by busy time
+        (the window only runs while a flush does); pipelined serving divides
+        by wall clock — device and finalize stages overlap, so their sum
+        exceeds elapsed time and would overstate throughput."""
+        denom = self.wall_seconds if self.wall_seconds > 0 else self.busy_seconds
+        return self.n_queries / denom if denom > 0 else 0.0
 
     @property
     def mean_batch_size(self) -> float:
@@ -143,6 +156,10 @@ class ServerStats:
 class MDRQServer:
     """Accumulates queries into batches and drives ``MDRQEngine.query_batch``."""
 
+    # Ticket type ``submit`` hands out — the pipelined subclass swaps in its
+    # event-backed ticket without re-implementing admission.
+    ticket_cls = Ticket
+
     def __init__(
         self,
         engine: MDRQEngine,
@@ -171,6 +188,10 @@ class MDRQServer:
     def n_pending(self) -> int:
         return len(self._pending)
 
+    def reset_stats(self) -> None:
+        """Fresh ``ServerStats`` (benchmark passes: drop warmup traffic)."""
+        self.stats = ServerStats()
+
     def submit(self, q: RangeQuery) -> Ticket:
         """Enqueue one query; flushes when a batching trigger fires."""
         if q.m != self.engine.dataset.m:
@@ -178,7 +199,7 @@ class MDRQServer:
             # batch they would fail every co-batched query's flush
             raise ValueError(
                 f"query dims {q.m} != dataset dims {self.engine.dataset.m}")
-        ticket = Ticket(self, spec=self.spec)
+        ticket = self.ticket_cls(self, spec=self.spec)
         now = time.perf_counter()
         if not self._pending:
             self._oldest_t = now
@@ -228,8 +249,11 @@ class MDRQServer:
         except Exception:
             # don't lose co-batched queries: put them back (in order) so
             # their tickets remain resolvable after the caller handles the
-            # error
+            # error — and re-anchor the deadline clock to the oldest
+            # re-queued query, or the next submit's deadline check would
+            # measure from whatever ``_oldest_t`` happened to hold
             self._pending = pending + self._pending
+            self._oldest_t = pending[0][2]
             raise
         dt = time.perf_counter() - t0
         for (_, ticket, _), res in zip(pending, results):

@@ -16,7 +16,8 @@ from repro.analysis import engine
 from repro.analysis.__main__ import main as lint_main
 from repro.analysis.rules import (ALL_RULES, HostSyncRule, LockDisciplineRule,
                                   RawShardMapRule, RegistryHygieneRule,
-                                  SentinelRule, UncountedLaunchRule)
+                                  SentinelRule, ThreadBoundaryRule,
+                                  UncountedLaunchRule)
 
 REPO = Path(__file__).resolve().parents[1]
 
@@ -338,6 +339,68 @@ def test_parse_error_is_a_finding(tmp_path):
     assert rep.active[0].rule == "parse-error"
 
 
+# -- rule 7: thread-boundary --------------------------------------------------
+
+def test_thread_boundary_flags_sync_and_parked_payloads(tmp_path):
+    rep = lint_one(tmp_path, "repro/serve/bad_pipeline.py", """\
+        from repro.kernels import ops
+        from repro.serve.pipeline import device_stage
+
+        class BadServer:
+            @device_stage
+            def flush(self):
+                pb = self.engine.launch_batch(self._queries)
+                host = ops.device_get(pb)       # sync on the wrong thread
+                self._inflight = pb             # parked device value
+                return host
+        """, ThreadBoundaryRule())
+    rules = [f.rule for f in rep.active]
+    assert rules == ["thread-boundary", "thread-boundary"]
+    assert "device_get" in rep.active[0].message
+    assert "_inflight" in rep.active[1].message
+
+
+def test_thread_boundary_taint_rides_wrappers(tmp_path):
+    """A device payload wrapped in a window object is still a device value —
+    parking the wrapper on self is the same cross-thread leak."""
+    rep = lint_one(tmp_path, "repro/serve/bad_window.py", """\
+        from repro.serve.pipeline import device_stage
+
+        class BadServer:
+            @device_stage
+            def flush(self):
+                pb = self.engine.launch_batch(self._queries)
+                win = _Window(batch=pb, reason="size")
+                self._last_window = win
+        """, ThreadBoundaryRule())
+    assert [f.rule for f in rep.active] == ["thread-boundary"]
+    assert "_last_window" in rep.active[0].message
+
+
+def test_thread_boundary_accepts_queue_handoff(tmp_path):
+    """The sanctioned shape: the payload crosses via the backlog queue, and
+    the finalizer stage owns the counted sync."""
+    rep = lint_one(tmp_path, "repro/serve/good_pipeline.py", """\
+        from repro.kernels import ops
+        from repro.serve.pipeline import device_stage, finalizer_stage
+
+        class GoodServer:
+            @device_stage
+            def flush(self):
+                pb = self.engine.launch_batch(self._queries)
+                win = _Window(batch=pb, reason="size")
+                self._backlog.put(win)          # the one sanctioned crossing
+                self.stats.n_flushes = self.stats.n_flushes + 1  # host data
+
+            @finalizer_stage
+            def _finalize_loop(self):
+                win = self._backlog.get()
+                host = ops.device_get(win.batch)  # finalizer owns the sync
+                return host
+        """, ThreadBoundaryRule())
+    assert rep.active == []
+
+
 # -- the shipped tree lints clean ---------------------------------------------
 
 def test_shipped_tree_is_clean():
@@ -349,7 +412,7 @@ def test_shipped_tree_is_clean():
 
 def test_all_rules_have_ids_and_docs():
     ids = [r.rule_id for r in ALL_RULES]
-    assert len(ids) == len(set(ids)) == 6
+    assert len(ids) == len(set(ids)) == 7
     assert all(r.doc for r in ALL_RULES)
 
 
