@@ -1,7 +1,7 @@
 # Developer entry points. The tier-1 gate is exactly what CI runs.
 PYTHONPATH := src
 
-.PHONY: test test-dist smoke lint lint-mdrq \
+.PHONY: test test-dist smoke lint lint-mdrq budget-cert budget-check \
         bench-throughput bench-count bench-specs \
         bench-specs-smoke bench-smoke bench-ingest bench-ingest-smoke \
         bench-pipeline bench-pipeline-smoke bench-dist bench
@@ -26,13 +26,26 @@ bench-throughput:
 	PYTHONPATH=src python -m benchmarks.run --only throughput
 
 # Lint gate: ruff (config in pyproject.toml) + mdrqlint. CI runs exactly this.
-lint: lint-mdrq
+lint: lint-mdrq budget-check
 	ruff check .
 
-# mdrqlint: AST-level invariant checks (launch/host-sync accounting, dtype
-# sentinels, lock + registry discipline) — DESIGN.md §12. Stdlib-only.
+# mdrqlint: whole-program AST invariant checks (launch/host-sync accounting
+# with cross-module taint, dtype sentinels, lock + registry discipline,
+# Pallas kernel contracts) — DESIGN.md §12. Stdlib-only.
 lint-mdrq:
-	PYTHONPATH=src python -m repro.analysis src tests
+	PYTHONPATH=src python -m repro.analysis src tests benchmarks examples
+
+# Regenerate the static launch/sync budget certificate (BUDGET.json) from
+# the project call graph. Run after any serving-path change and commit the
+# diff — CI diffs the checked-in file via budget-check.
+budget-cert:
+	PYTHONPATH=src python -m repro.analysis --budget BUDGET.json
+	git diff --stat BUDGET.json
+
+# Fail if BUDGET.json no longer matches a fresh derivation (stdlib-only, so
+# it rides the cheap lint job).
+budget-check:
+	PYTHONPATH=src python -m repro.analysis --budget-check BUDGET.json
 
 # Count-only result mode sweep (device-side reduction, no host nonzero).
 bench-count:

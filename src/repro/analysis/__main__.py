@@ -1,7 +1,9 @@
 """CLI: ``python -m repro.analysis [paths...]``.
 
-Exit status 0 iff no unsuppressed, unbaselined findings. CI runs
-``python -m repro.analysis src tests`` next to ruff (``make lint-mdrq``).
+Exit codes: 0 clean; 1 findings or stale baseline entries; 2 parse/usage
+errors. CI runs ``python -m repro.analysis src tests benchmarks examples``
+next to ruff (``make lint-mdrq``) and ``--budget-check BUDGET.json`` in the
+same job (``make budget-cert`` regenerates the certificate).
 """
 from __future__ import annotations
 
@@ -10,24 +12,75 @@ import json
 import sys
 from pathlib import Path
 
-from repro.analysis.engine import (DEFAULT_BASELINE, load_baseline, run,
-                                   write_baseline)
+from repro.analysis.engine import (DEFAULT_BASELINE, build_project,
+                                   iter_py_files, load_baseline,
+                                   prune_baseline, run, write_baseline)
 from repro.analysis.rules import ALL_RULES
+
+DEFAULT_PATHS = ["src", "tests", "benchmarks", "examples"]
+
+
+def _budget(paths: list[str], out: str | None, check: str | None) -> int:
+    """Certify launch/sync budgets; write or diff the certificate."""
+    from repro.analysis import budget
+
+    files = iter_py_files([Path(p) for p in paths])
+    project, errors = build_project(files)
+    if errors:
+        for e in errors:
+            print(e.format())
+        return 2
+    try:
+        if check is not None:
+            drift = budget.check(project.graph, Path(check))
+            if drift:
+                print(f"mdrqlint: budget certificate {check} is stale "
+                      f"({len(drift)} difference(s)) — regenerate with "
+                      "`make budget-cert` and review the diff:")
+                for line in drift:
+                    print(f"  {line}")
+                return 1
+            print(f"mdrqlint: budget certificate {check} matches the source")
+            return 0
+        cert = budget.certify(project.graph)
+        text = budget.render(cert)
+        if out is None or out == "-":
+            print(text, end="")
+        else:
+            Path(out).write_text(text)
+            print(f"mdrqlint: wrote budget certificate to {out}")
+        return 0
+    except budget.BudgetError as e:
+        print(f"mdrqlint: budget certification failed: {e}")
+        return 2
 
 
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="mdrqlint: static checks for launch/host-sync/sentinel/"
-                    "lock/registry invariants (DESIGN.md §12)")
-    ap.add_argument("paths", nargs="*", default=["src", "tests"],
-                    help="files or directories to lint (default: src tests)")
+        description="mdrqlint: whole-program static checks for launch/"
+                    "host-sync/sentinel/lock/registry/kernel-contract "
+                    "invariants, plus the launch/sync budget certifier "
+                    "(DESIGN.md §12)")
+    ap.add_argument("paths", nargs="*", default=DEFAULT_PATHS,
+                    help="files or directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
     ap.add_argument("--json", metavar="FILE", default=None,
                     help="also write the full report as JSON")
     ap.add_argument("--baseline", metavar="FILE", default=None,
                     help=f"baseline file (default: {DEFAULT_BASELINE})")
     ap.add_argument("--write-baseline", action="store_true",
                     help="accept all current findings into the baseline")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help="drop stale baseline entries (keys matching no "
+                         "current finding)")
+    ap.add_argument("--budget", metavar="FILE", nargs="?", const="-",
+                    default=None,
+                    help="derive the static launch/sync budget certificate "
+                         "and write it to FILE (stdout if omitted)")
+    ap.add_argument("--budget-check", metavar="FILE", default=None,
+                    help="diff the checked-in budget certificate against a "
+                         "fresh derivation; exit 1 on drift")
     ap.add_argument("--list-rules", action="store_true",
                     help="print rule ids and the invariants they encode")
     args = ap.parse_args(argv)
@@ -37,6 +90,12 @@ def main(argv: list[str] | None = None) -> int:
             print(f"{rule.rule_id}: {rule.doc}")
         return 0
 
+    if args.budget is not None or args.budget_check is not None:
+        # certification scans src only: budgets are a property of the
+        # package, not of tests/benchmarks driving it
+        paths = args.paths if args.paths != DEFAULT_PATHS else ["src"]
+        return _budget(paths, args.budget, args.budget_check)
+
     baseline_path = Path(args.baseline) if args.baseline else None
     report = run([Path(p) for p in args.paths], ALL_RULES,
                  baseline=load_baseline(baseline_path))
@@ -45,6 +104,12 @@ def main(argv: list[str] | None = None) -> int:
         path = write_baseline(report, baseline_path)
         print(f"mdrqlint: wrote {len(report.active) + len(report.baselined)} "
               f"accepted finding(s) to {path}")
+        return 0
+    if args.prune_baseline:
+        path = prune_baseline(report, baseline_path)
+        print(f"mdrqlint: pruned {len(report.stale_baseline)} stale "
+              f"entr(y/ies) from {path} "
+              f"({len(report.baselined)} kept)")
         return 0
 
     if args.json:

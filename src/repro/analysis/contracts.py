@@ -1,0 +1,239 @@
+"""Pallas kernel-contract rules (mdrqlint v2, DESIGN.md §12).
+
+The kernels under ``repro/kernels/`` all follow the same physical contract:
+padded array extents divide their tiles (the grid is exact, no partial
+tiles), accumulators state their dtype instead of inheriting numpy's
+defaults, and every jitted body opens with the ``ops.note_trace`` probe that
+makes retraces observable. Each clause has burned us before — PR 3's
+``-3.4e38``-rounds-to-``-inf`` bf16 bug was exactly a dtype assumption
+crossing a ``pallas_call`` signature — so each is a rule:
+
+``kernel-tile``
+    every ``a // b`` appearing in a ``grid=`` (directly, via a same-function
+    ``grid = (...)`` assignment, or inside a ``PrefetchScalarGridSpec``)
+    must be backed by an ``assert a % b == 0`` in the same function. A grid
+    built from an inexact division silently drops the remainder tile — the
+    scan returns wrong answers only for the tail objects, the worst kind of
+    wrong.
+
+``kernel-dtype``
+    inside a kernel body (a function passed to ``pallas_call``), array
+    creations (``jnp.zeros/ones/full/empty``) must pass an explicit dtype —
+    a defaulted f32 accumulator silently downcasts on store when the out ref
+    is narrower; and ``inf`` fills must state a wide dtype (use
+    ``numerics.mask_fill(ref.dtype)`` for a finite sentinel).
+
+``note-trace``
+    every jit-decorated function (and same-module defs bound via
+    ``X = jax.jit(f)``) opens with ``ops.note_trace("...")`` as its first
+    non-docstring statement — the trace-time probe the AOT warmup's
+    zero-retrace assertion (DESIGN.md §13) is built on.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import FileContext, Finding, Rule
+from repro.analysis.rules import (_dotted, _has_jit_decorator, _in_repro,
+                                  _is_jit_expr)
+
+
+def _mod_assert_pairs(fn: ast.AST) -> set[tuple[str, str]]:
+    """All ``(a, b)`` with an ``assert ... a % b == 0 ...`` in ``fn``."""
+    pairs: set[tuple[str, str]] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assert):
+            continue
+        for cmp in ast.walk(node.test):
+            if isinstance(cmp, ast.Compare) \
+                    and isinstance(cmp.left, ast.BinOp) \
+                    and isinstance(cmp.left.op, ast.Mod) \
+                    and len(cmp.ops) == 1 \
+                    and isinstance(cmp.ops[0], ast.Eq) \
+                    and isinstance(cmp.comparators[0], ast.Constant) \
+                    and cmp.comparators[0].value == 0:
+                pairs.add((ast.unparse(cmp.left.left),
+                           ast.unparse(cmp.left.right)))
+    return pairs
+
+
+def _grid_exprs(fn: ast.AST) -> list[ast.expr]:
+    """Every expression passed as ``grid=`` inside ``fn``, with one level of
+    ``grid = (...)`` local-assignment indirection resolved."""
+    assigns: dict[str, ast.expr] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            assigns[node.targets[0].id] = node.value
+    out: list[ast.expr] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg == "grid":
+                    e = kw.value
+                    if isinstance(e, ast.Name) and e.id in assigns:
+                        e = assigns[e.id]
+                    out.append(e)
+    return out
+
+
+class KernelTileRule(Rule):
+    rule_id = "kernel-tile"
+    doc = ("Every floor division in a Pallas grid needs a matching "
+           "divisibility assert in the same function — an inexact grid "
+           "silently drops the remainder tile (wrong answers for tail "
+           "objects only).")
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        if not _in_repro(ctx.posix) or "/kernels/" not in ctx.posix:
+            return []
+        findings: list[Finding] = []
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            grids = _grid_exprs(fn)
+            if not grids:
+                continue
+            pairs = _mod_assert_pairs(fn)
+            for g in grids:
+                for div in ast.walk(g):
+                    if isinstance(div, ast.BinOp) \
+                            and isinstance(div.op, ast.FloorDiv):
+                        a = ast.unparse(div.left)
+                        b = ast.unparse(div.right)
+                        if (a, b) not in pairs:
+                            findings.append(self.finding(
+                                ctx, div, f"grid uses '{a} // {b}' without "
+                                f"'assert {a} % {b} == 0' in "
+                                f"'{fn.name}' — an inexact grid drops the "
+                                "remainder tile"))
+        return findings
+
+
+def _kernel_body_names(tree: ast.AST) -> set[str]:
+    """Names of functions passed (possibly via ``functools.partial``) as the
+    kernel argument of a ``pallas_call``."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and (_dotted(node.func) or "").endswith("pallas_call")
+                and node.args):
+            continue
+        k = node.args[0]
+        if isinstance(k, ast.Call) and \
+                (_dotted(k.func) or "").rsplit(".", 1)[-1] == "partial" \
+                and k.args:
+            k = k.args[0]
+        n = _dotted(k)
+        if n:
+            out.add(n.rsplit(".", 1)[-1])
+    return out
+
+
+_CREATORS = {"zeros": 2, "ones": 2, "empty": 2, "full": 3}
+_INF_NAMES = {"np.inf", "jnp.inf", "math.inf", "inf"}
+_WIDE_DTYPES = {"np.float32", "jnp.float32", "np.float64", "jnp.float64",
+                "float", "F32", "F64", "FLOAT32", "FLOAT64"}
+
+
+def _is_inf(e: ast.AST) -> bool:
+    if isinstance(e, ast.UnaryOp) and isinstance(e.op, (ast.USub, ast.UAdd)):
+        return _is_inf(e.operand)
+    return _dotted(e) in _INF_NAMES
+
+
+class KernelDtypeRule(Rule):
+    rule_id = "kernel-dtype"
+    doc = ("Array creations inside Pallas kernel bodies must state their "
+           "dtype (a defaulted accumulator silently downcasts on store), "
+           "and inf fills must state a wide one (PR 3's bf16 sentinel bug "
+           "shape, inside the pallas_call signature).")
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        if not _in_repro(ctx.posix) or "/kernels/" not in ctx.posix:
+            return []
+        kernels = _kernel_body_names(ctx.tree)
+        if not kernels:
+            return []
+        findings: list[Finding] = []
+        for fn in ast.walk(ctx.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and fn.name in kernels:
+                findings.extend(self._check_kernel(ctx, fn))
+        return findings
+
+    def _check_kernel(self, ctx: FileContext, fn: ast.AST) -> list[Finding]:
+        findings: list[Finding] = []
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func) or ""
+            short = name.rsplit(".", 1)[-1]
+            if short in _CREATORS:
+                n_for_dtype = _CREATORS[short]
+                has_dtype = len(node.args) >= n_for_dtype or any(
+                    k.arg == "dtype" for k in node.keywords)
+                if not has_dtype:
+                    findings.append(self.finding(
+                        ctx, node, f"'{short}' without an explicit dtype in "
+                        f"kernel body '{fn.name}' — a defaulted accumulator "
+                        "dtype silently downcasts when stored to a narrower "
+                        "ref; state it (match the out ref)"))
+            if short in ("full", "full_like"):
+                vals = list(node.args) + [k.value for k in node.keywords]
+                if any(_is_inf(v) for v in vals):
+                    dtypes = [_dotted(v) for v in vals]
+                    if not any(d in _WIDE_DTYPES for d in dtypes if d):
+                        findings.append(self.finding(
+                            ctx, node, f"inf fill without a wide dtype in "
+                            f"kernel body '{fn.name}' — use "
+                            "numerics.mask_fill(ref.dtype) for a finite "
+                            "sentinel or state an f32 dtype"))
+        return findings
+
+
+class NoteTraceRule(Rule):
+    rule_id = "note-trace"
+    doc = ("Every jitted body's first statement is ops.note_trace('op') — "
+           "the trace-time probe the serving pipeline's zero-retrace "
+           "assertion (AOT warmup, DESIGN.md §13) is built on.")
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        if not _in_repro(ctx.posix) or "/analysis/" in ctx.posix:
+            return []
+        defs: dict[str, ast.AST] = {}
+        jitted: dict[str, ast.AST] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs[node.name] = node
+                if _has_jit_decorator(node):
+                    jitted[node.name] = node
+        # X = jax.jit(f) / functools.partial(jax.jit, ...)(f) bindings over
+        # same-module defs are jit entry points too
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) and _is_jit_expr(node.value):
+                for a in node.value.args:
+                    n = _dotted(a)
+                    if n in defs and n not in ("jax.jit", "jit"):
+                        jitted[n] = defs[n]
+        findings: list[Finding] = []
+        for name, fn in sorted(jitted.items()):
+            body = list(fn.body)
+            if body and isinstance(body[0], ast.Expr) \
+                    and isinstance(body[0].value, ast.Constant) \
+                    and isinstance(body[0].value.value, str):
+                body = body[1:]  # docstring
+            first = body[0] if body else None
+            ok = (isinstance(first, ast.Expr)
+                  and isinstance(first.value, ast.Call)
+                  and (_dotted(first.value.func) or ""
+                       ).rsplit(".", 1)[-1] == "note_trace")
+            if not ok:
+                findings.append(self.finding(
+                    ctx, fn, f"jitted body '{name}' does not open with "
+                    "ops.note_trace(...) — retraces of this body are "
+                    "invisible to the AOT warmup's zero-retrace assertion"))
+        return findings
+
+
+CONTRACT_RULES = (KernelTileRule(), KernelDtypeRule(), NoteTraceRule())

@@ -1,11 +1,23 @@
-"""mdrqlint rule engine: findings, suppressions, baseline, file runner.
+"""mdrqlint rule engine: findings, suppressions, baseline, project runner.
 
 The engine is deliberately tiny and dependency-free (stdlib ``ast`` only):
 rules receive a parsed ``FileContext`` and return ``Finding`` records; the
 runner splits them into *active* / *suppressed* (a ``# mdrqlint: disable=``
-comment on the finding's line) / *baselined* (listed in the checked-in
-``baseline.json`` — accepted legacy debt, keyed by (file, rule, message) so
-entries survive unrelated line drift).
+comment on the finding's line, comma-separated for multiple rules) /
+*baselined* (listed in the checked-in ``baseline.json`` — accepted legacy
+debt, keyed by (file, rule, message) so entries survive unrelated line
+drift).
+
+v2 (whole-program): the runner parses every file first, builds one
+``callgraph.CallGraph`` over the set, and hands each rule a ``FileContext``
+carrying the shared ``ProjectContext`` — so rules can resolve imports,
+aliases, counted-op registrations, and method receivers across module
+boundaries instead of stopping at the file edge. Baseline entries that no
+longer match any finding are *stale*: they fail the run (CI-enforced — a
+stale entry is a fixed bug still wearing its waiver) until
+``--prune-baseline`` drops them.
+
+Exit codes: 0 clean; 1 findings or stale baseline entries; 2 parse errors.
 """
 from __future__ import annotations
 
@@ -15,6 +27,8 @@ import json
 import re
 from pathlib import Path
 from typing import Iterable, Optional
+
+from repro.analysis.callgraph import CallGraph
 
 _SUPPRESS_RE = re.compile(r"#\s*mdrqlint:\s*disable=([\w,\- ]+)")
 
@@ -42,6 +56,21 @@ class Finding:
 
 
 @dataclasses.dataclass
+class ProjectContext:
+    """The whole-program view shared by every rule in one run.
+
+    ``graph`` is the project call graph (symbol tables, import/alias
+    resolution, counted-op registry, class method resolution); ``cache`` is
+    scratch space for project-wide analyses that should run once per run,
+    not once per file (e.g. the cross-module taint fixpoint).
+    """
+
+    files: "list[FileContext]"
+    graph: CallGraph
+    cache: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
 class FileContext:
     """One parsed source file, handed to every rule."""
 
@@ -49,6 +78,7 @@ class FileContext:
     posix: str  # posix path string; rules scope themselves by substring
     text: str
     tree: ast.AST
+    project: Optional[ProjectContext] = None
 
     @classmethod
     def parse(cls, path: Path) -> "FileContext":
@@ -58,6 +88,11 @@ class FileContext:
 
     def segment(self, node: ast.AST) -> str:
         return ast.get_source_segment(self.text, node) or ""
+
+    @property
+    def module(self) -> str:
+        from repro.analysis.callgraph import module_name
+        return module_name(self.path)
 
 
 class Rule:
@@ -75,7 +110,11 @@ class Rule:
 
 
 def parse_suppressions(text: str) -> dict[int, set[str]]:
-    """Map line number -> set of rule ids disabled on that line."""
+    """Map line number -> set of rule ids disabled on that line.
+
+    ``# mdrqlint: disable=host-sync,sentinel`` disables both rules on the
+    line; ``disable=all`` disables every rule.
+    """
     out: dict[int, set[str]] = {}
     for i, line in enumerate(text.splitlines(), start=1):
         m = _SUPPRESS_RE.search(line)
@@ -98,31 +137,49 @@ def iter_py_files(paths: Iterable[Path]) -> list[Path]:
 
 @dataclasses.dataclass
 class Report:
-    """Partitioned lint results for one run."""
+    """Partitioned lint results for one run.
+
+    ``errors`` are files the engine could not parse (exit code 2 — a broken
+    tree is not a clean tree, and not a finding either); ``stale_baseline``
+    are accepted-debt keys matching no current finding (exit code 1 until
+    pruned — the debt is paid, drop the waiver).
+    """
 
     active: list[Finding] = dataclasses.field(default_factory=list)
     suppressed: list[Finding] = dataclasses.field(default_factory=list)
     baselined: list[Finding] = dataclasses.field(default_factory=list)
+    errors: list[Finding] = dataclasses.field(default_factory=list)
+    stale_baseline: list[str] = dataclasses.field(default_factory=list)
     n_files: int = 0
 
     @property
     def exit_code(self) -> int:
-        return 1 if self.active else 0
+        if self.errors:
+            return 2
+        return 1 if (self.active or self.stale_baseline) else 0
 
     def to_json(self) -> dict:
         return {
             "findings": [f.to_json() for f in self.active],
             "suppressed": [f.to_json() for f in self.suppressed],
             "baselined": [f.to_json() for f in self.baselined],
+            "errors": [f.to_json() for f in self.errors],
+            "stale_baseline": list(self.stale_baseline),
             "n_files": self.n_files,
         }
 
     def format(self) -> str:
-        lines = [f.format() for f in self.active]
+        lines = [f.format() for f in self.errors]
+        lines += [f.format() for f in self.active]
+        for key in self.stale_baseline:
+            lines.append(f"stale baseline entry (no matching finding — run "
+                         f"--prune-baseline): {key}")
         lines.append(
             f"mdrqlint: {len(self.active)} finding(s) "
             f"({len(self.suppressed)} suppressed, "
-            f"{len(self.baselined)} baselined) in {self.n_files} file(s)")
+            f"{len(self.baselined)} baselined, "
+            f"{len(self.stale_baseline)} stale baseline entr(y/ies), "
+            f"{len(self.errors)} parse error(s)) in {self.n_files} file(s)")
         return "\n".join(lines)
 
 
@@ -143,6 +200,33 @@ def write_baseline(report: Report, path: Optional[Path] = None) -> Path:
     return path
 
 
+def prune_baseline(report: Report, path: Optional[Path] = None) -> Path:
+    """Drop stale baseline entries, keeping only keys that still match."""
+    path = Path(path) if path is not None else DEFAULT_BASELINE
+    keys = sorted({f.baseline_key() for f in report.baselined})
+    path.write_text(json.dumps({"accepted": keys}, indent=2) + "\n")
+    return path
+
+
+def build_project(files: Iterable[Path]) -> tuple[ProjectContext,
+                                                  list[Finding]]:
+    """Parse every file once and build the shared whole-program context."""
+    ctxs: list[FileContext] = []
+    errors: list[Finding] = []
+    for path in files:
+        try:
+            ctxs.append(FileContext.parse(path))
+        except SyntaxError as e:
+            errors.append(Finding(
+                file=path.as_posix(), line=e.lineno or 0, rule="parse-error",
+                message=f"could not parse: {e.msg}"))
+    project = ProjectContext(
+        files=ctxs, graph=CallGraph.build([(c.path, c.tree) for c in ctxs]))
+    for ctx in ctxs:
+        ctx.project = project
+    return project, errors
+
+
 def run(paths: Iterable[Path], rules: Iterable[Rule],
         baseline: Optional[set[str]] = None) -> Report:
     """Lint ``paths`` with ``rules``; partition findings against baseline."""
@@ -150,14 +234,9 @@ def run(paths: Iterable[Path], rules: Iterable[Rule],
     report = Report()
     files = iter_py_files(paths)
     report.n_files = len(files)
-    for path in files:
-        try:
-            ctx = FileContext.parse(path)
-        except SyntaxError as e:
-            report.active.append(Finding(
-                file=path.as_posix(), line=e.lineno or 0, rule="parse-error",
-                message=f"could not parse: {e.msg}"))
-            continue
+    project, report.errors = build_project(files)
+    matched_keys: set[str] = set()
+    for ctx in project.files:
         suppressions = parse_suppressions(ctx.text)
         for rule in rules:
             for f in rule.check(ctx):
@@ -165,10 +244,13 @@ def run(paths: Iterable[Path], rules: Iterable[Rule],
                 if f.rule in disabled or "all" in disabled:
                     report.suppressed.append(f)
                 elif f.baseline_key() in baseline:
+                    matched_keys.add(f.baseline_key())
                     report.baselined.append(f)
                 else:
                     report.active.append(f)
+    report.stale_baseline = sorted(baseline - matched_keys)
     report.active.sort()
     report.suppressed.sort()
     report.baselined.sort()
+    report.errors.sort()
     return report

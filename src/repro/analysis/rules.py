@@ -25,21 +25,33 @@ registry-hygiene    ``@register_result_spec`` classes are frozen dataclasses
                     mutable class-level defaults
 ==================  =========================================================
 
-The host-sync rule is a deliberately conservative *taint-lite* dataflow pass:
-device values enter a function only through counted ``ops.*`` calls,
-jit-bound callables (including ``self.fn = jax.jit(...)`` attributes), bare
-``pallas_call``, or same-module functions that return tainted values; taint
-propagates through assignment/unpacking/subscripts/arithmetic and through
-calls carrying tainted arguments; ``ops.device_get`` launders taint (it *is*
-the counted sync). Cross-class method calls are conservatively untainted —
-each class's own methods are checked where they are defined.
+The host-sync rule is a *taint-lite* dataflow pass: device values enter a
+function through counted ``ops.*`` calls, jit-bound callables (including
+``self.fn = jax.jit(...)`` attributes), bare ``pallas_call``, or functions
+that return tainted values; taint propagates through assignment/unpacking/
+subscripts/arithmetic and through calls carrying tainted arguments;
+``ops.device_get`` launders taint (it *is* the counted sync).
+
+v2 (whole-program): with a ``ProjectContext`` present (the runner always
+builds one), tainted-returning functions are computed as a *project-wide*
+fixpoint over the call graph — a device value returned by
+``core.scan.ColumnarScan.launch_batch`` stays tainted through a ``serve/``
+helper that calls it, aliased imports (``from repro.kernels import ops as
+o``) resolve to the counted registry, and ``self.<attr>.method(...)`` calls
+resolve through inferred attribute types. Per-file analysis remains the
+fallback when no project is attached.
+
+Three kernel-contract rules (``kernel-tile``, ``kernel-dtype``,
+``note-trace``) live in ``analysis.contracts`` and are re-exported through
+``ALL_RULES`` here.
 """
 from __future__ import annotations
 
 import ast
 from typing import Optional
 
-from repro.analysis.engine import FileContext, Finding, Rule
+from repro.analysis.engine import (FileContext, Finding, ProjectContext,
+                                   Rule)
 
 # ---------------------------------------------------------------------------
 # shared AST helpers
@@ -102,6 +114,16 @@ def _in_repro(posix: str) -> bool:
     return "/repro/" in posix or posix.startswith("repro/")
 
 
+def _in_sync_scope(posix: str) -> bool:
+    """host-sync scope: the package plus the driver trees that consume it —
+    an uncounted coercion in ``benchmarks/`` corrupts the very numbers the
+    benchmark reports, so the rule covers them too."""
+    if _in_repro(posix):
+        return True
+    return any(f"/{root}/" in posix or posix.startswith(f"{root}/")
+               for root in ("benchmarks", "examples"))
+
+
 # ---------------------------------------------------------------------------
 # rule 1: host-sync — taint-lite device->host coercion check
 # ---------------------------------------------------------------------------
@@ -123,13 +145,15 @@ class _FnTaint:
 
     def __init__(self, rule: "HostSyncRule", ctx: FileContext,
                  jit_names: set[str], jit_attrs: set[str],
-                 tainted_returning: set[str], collect_only: bool):
+                 tainted_returning: set[str], collect_only: bool,
+                 xmod: "Optional[_CrossModule]" = None):
         self.rule = rule
         self.ctx = ctx
         self.jit_names = jit_names
         self.jit_attrs = jit_attrs
         self.tainted_returning = tainted_returning
         self.collect_only = collect_only
+        self.xmod = xmod
         self.tainted: set[str] = set()
         self.returns_tainted = False
         self.findings: list[Finding] = []
@@ -249,8 +273,9 @@ class _FnTaint:
         fname = _dotted(e.func) or ""
         short = fname.rsplit(".", 1)[-1]
 
-        # blessed: the counted sync returns host data and launders taint
-        if fname == "ops.device_get" or fname == "device_get":
+        # blessed: the counted sync returns host data and launders taint —
+        # under any alias ("device_get" is unambiguous in this codebase)
+        if short == "device_get" and not fname.startswith("jax"):
             for a in list(e.args) + [k.value for k in e.keywords]:
                 self.expr(a)
             return False
@@ -290,40 +315,170 @@ class _FnTaint:
         elif short == "pallas_call" or (isinstance(e.func, ast.Call)
                                         and self.expr(e.func)):
             source = True
+        elif self.xmod is not None and self.xmod.is_source(fname):
+            source = True
         return source or args_tainted or base_tainted
+
+
+def _module_jit_sets(tree: ast.AST) -> tuple[set[str], set[str]]:
+    """(jit-bound names, jit-bound self attrs) for one module tree."""
+    jit_names: set[str] = set()   # module-level jit-bound callables
+    jit_attrs: set[str] = set()   # self.<attr> = jax.jit(...) anywhere
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _has_jit_decorator(node):
+                jit_names.add(node.name)
+        elif isinstance(node, ast.Assign) and _is_jit_expr(node.value):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    jit_names.add(tgt.id)
+                elif isinstance(tgt, ast.Attribute):
+                    jit_attrs.add(tgt.attr)
+    return jit_names, jit_attrs
+
+
+def _functions_with_class(tree: ast.AST) -> list[tuple[ast.AST,
+                                                       Optional[str]]]:
+    """Every function def in the tree, with its immediate owning class."""
+    out: list[tuple[ast.AST, Optional[str]]] = []
+    method_ids = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    out.append((item, node.name))
+                    method_ids.add(id(item))
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and id(node) not in method_ids:
+            out.append((node, None))
+    return out
+
+
+class _CrossModule:
+    """Cross-module source oracle for ``_FnTaint`` (project runs only).
+
+    Resolves a call's dotted name through the project call graph: counted-op
+    registrations under any import alias, project functions in the tainted-
+    returning fixpoint set, and ``self.<attr>.method(...)`` receivers via
+    inferred attribute types.
+    """
+
+    def __init__(self, graph, module: str, cls: Optional[str],
+                 tainted_quals: set[str]):
+        self.graph = graph
+        self.module = module
+        self.cls = cls
+        self.tainted_quals = tainted_quals
+
+    def is_source(self, fname: str) -> bool:
+        if not fname:
+            return False
+        if fname.startswith("self."):
+            return self._self_call(fname[len("self."):])
+        q = self.graph.resolve(self.module, fname)
+        if q is None:
+            return False
+        return q in self.graph.counted_ops or q in self.tainted_quals
+
+    def _self_call(self, rest: str) -> bool:
+        if self.cls is None:
+            return False
+        cq = f"{self.module}.{self.cls}"
+        head, _, meth = rest.partition(".")
+        if not meth:   # self.method()
+            hit = self.graph.lookup_method(cq, head)
+            return hit is not None and hit.qual in self.tainted_quals
+        if "." in meth:
+            return False
+        ci = self.graph.classes.get(cq)
+        if ci is None or head not in ci.attr_types:
+            return False
+        hit = self.graph.lookup_method(ci.attr_types[head], meth)
+        return hit is not None and hit.qual in self.tainted_quals
+
+
+def project_tainted_quals(project: ProjectContext) -> set[str]:
+    """Project-wide fixpoint: quals of functions returning device values.
+
+    Cached on the ProjectContext — computed once per run, shared by every
+    file's host-sync pass. Monotone (the set only grows), so the sweep
+    converges; 6 rounds bounds the deepest cross-module return chain in
+    this tree with slack.
+    """
+    cached = project.cache.get("host_sync_tainted")
+    if cached is not None:
+        return cached
+    graph = project.graph
+    rule = HostSyncRule()
+    mods = []
+    for fctx in project.files:
+        mod = graph.modules.get(fctx.module)
+        if mod is None:
+            continue
+        jn, ja = _module_jit_sets(fctx.tree)
+        mods.append((fctx, mod, jn, ja, _functions_with_class(fctx.tree)))
+    tainted: set[str] = set()
+    for _ in range(6):
+        changed = False
+        for fctx, mod, jn, ja, fns in mods:
+            local = {q.rsplit(".", 1)[-1] for q in tainted
+                     if q.startswith(mod.name + ".")}
+            for fn, cls in fns:
+                prefix = f"{mod.name}.{cls}." if cls else f"{mod.name}."
+                qual = prefix + fn.name
+                if qual in tainted:
+                    continue
+                xmod = _CrossModule(graph, mod.name, cls, tainted)
+                t = _FnTaint(rule, fctx, jn, ja, local, collect_only=True,
+                             xmod=xmod)
+                t.run(fn)
+                if t.returns_tainted:
+                    tainted.add(qual)
+                    changed = True
+        if not changed:
+            break
+    project.cache["host_sync_tainted"] = tainted
+    return tainted
 
 
 class HostSyncRule(Rule):
     rule_id = "host-sync"
     doc = ("Device->host transfers must route through ops.device_get so the "
-           "launch/host-sync counters (and span attribution) stay exact.")
+           "launch/host-sync counters (and span attribution) stay exact. "
+           "Whole-program: taint follows returns across module boundaries.")
 
     _ALLOWLIST = ("kernels/ops.py",   # the accounting home itself
                   "obs/tracing.py")   # span exit's sanctioned sync
 
     def check(self, ctx: FileContext) -> list[Finding]:
-        if not _in_repro(ctx.posix) or "/analysis/" in ctx.posix:
+        if not _in_sync_scope(ctx.posix) or "/analysis/" in ctx.posix:
             return []
         if any(ctx.posix.endswith(a) for a in self._ALLOWLIST):
             return []
 
-        jit_names: set[str] = set()   # module-level jit-bound callables
-        jit_attrs: set[str] = set()   # self.<attr> = jax.jit(...) anywhere
-        functions: list[ast.AST] = []
-        for node in ast.walk(ctx.tree):
-            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                functions.append(node)
-                if _has_jit_decorator(node):
-                    jit_names.add(node.name)
-            elif isinstance(node, ast.Assign) and _is_jit_expr(node.value):
-                for tgt in node.targets:
-                    if isinstance(tgt, ast.Name):
-                        jit_names.add(tgt.id)
-                    elif isinstance(tgt, ast.Attribute):
-                        jit_attrs.add(tgt.attr)
+        jit_names, jit_attrs = _module_jit_sets(ctx.tree)
+        fns = _functions_with_class(ctx.tree)
+        functions = [fn for fn, _ in fns]
 
-        # pass A: which same-module functions return device values?
-        tainted_returning: set[str] = set()
+        if ctx.project is not None:
+            graph = ctx.project.graph
+            modname = ctx.module
+            quals = project_tainted_quals(ctx.project)
+            tainted_returning = {q.rsplit(".", 1)[-1] for q in quals
+                                 if q.startswith(modname + ".")}
+            findings: list[Finding] = []
+            for fn, cls in fns:
+                xmod = _CrossModule(graph, modname, cls, quals)
+                t = _FnTaint(self, ctx, jit_names, jit_attrs,
+                             tainted_returning, collect_only=False,
+                             xmod=xmod)
+                t.run(fn)
+                findings.extend(t.findings)
+            return findings
+
+        # fallback: same-module-only analysis (no project attached)
+        tainted_returning = set()
         for _ in range(2):  # one refinement round catches chained returns
             for fn in functions:
                 t = _FnTaint(self, ctx, jit_names, jit_attrs,
@@ -331,9 +486,7 @@ class HostSyncRule(Rule):
                 t.run(fn)
                 if t.returns_tainted:
                     tainted_returning.add(fn.name)
-
-        # pass B: flag sinks
-        findings: list[Finding] = []
+        findings = []
         for fn in functions:
             t = _FnTaint(self, ctx, jit_names, jit_attrs,
                          tainted_returning, collect_only=False)
@@ -770,7 +923,10 @@ class ThreadBoundaryRule(Rule):
         return findings
 
 
+# imported at the bottom: contracts.py needs the helpers defined above
+from repro.analysis.contracts import CONTRACT_RULES  # noqa: E402
+
 ALL_RULES: tuple[Rule, ...] = (
     HostSyncRule(), UncountedLaunchRule(), RawShardMapRule(), SentinelRule(),
     LockDisciplineRule(), RegistryHygieneRule(), ThreadBoundaryRule(),
-)
+) + CONTRACT_RULES

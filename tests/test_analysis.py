@@ -14,6 +14,8 @@ import pytest
 
 from repro.analysis import engine
 from repro.analysis.__main__ import main as lint_main
+from repro.analysis.contracts import (KernelDtypeRule, KernelTileRule,
+                                      NoteTraceRule)
 from repro.analysis.rules import (ALL_RULES, HostSyncRule, LockDisciplineRule,
                                   RawShardMapRule, RegistryHygieneRule,
                                   SentinelRule, ThreadBoundaryRule,
@@ -330,13 +332,51 @@ def test_report_format_and_json(tmp_path):
     assert data["findings"][0]["rule"] == "sentinel"
 
 
-def test_parse_error_is_a_finding(tmp_path):
+def test_parse_error_exits_2_not_1(tmp_path):
+    """Broken tree != dirty tree: parse errors get their own exit code."""
     path = tmp_path / "repro" / "core" / "broken.py"
     path.parent.mkdir(parents=True)
     path.write_text("def oops(:\n")
     rep = engine.run([path], ALL_RULES)
-    assert rep.exit_code == 1
-    assert rep.active[0].rule == "parse-error"
+    assert rep.exit_code == 2
+    assert rep.active == []
+    assert rep.errors[0].rule == "parse-error"
+
+
+def test_multi_rule_suppression_comma_separated(tmp_path):
+    src = """\
+        import numpy as np
+        from repro.kernels import ops
+
+        def peek(x):
+            return np.asarray(ops.range_scan(x)), -3.0e38  # mdrqlint: disable=host-sync,sentinel
+        """
+    path = tmp_path / "repro" / "core" / "multi.py"
+    path.parent.mkdir(parents=True)
+    path.write_text(textwrap.dedent(src))
+    rep = engine.run([path], ALL_RULES)
+    assert rep.active == []
+    assert sorted({f.rule for f in rep.suppressed}) == ["host-sync",
+                                                        "sentinel"]
+
+
+def test_stale_baseline_fails_and_prune_drops_it(tmp_path, capsys):
+    path = tmp_path / "repro" / "models" / "legacy.py"
+    path.parent.mkdir(parents=True)
+    path.write_text("OLD = -3.0e38\n")
+    bl = tmp_path / "bl.json"
+    assert lint_main([str(path), "--baseline", str(bl),
+                      "--write-baseline"]) == 0
+
+    # debt paid: the finding is gone, but its waiver lingers -> exit 1
+    path.write_text("OLD = 0.0\n")
+    assert lint_main([str(path), "--baseline", str(bl)]) == 1
+    assert "stale baseline entry" in capsys.readouterr().out
+
+    assert lint_main([str(path), "--baseline", str(bl),
+                      "--prune-baseline"]) == 0
+    assert engine.load_baseline(bl) == set()
+    assert lint_main([str(path), "--baseline", str(bl)]) == 0
 
 
 # -- rule 7: thread-boundary --------------------------------------------------
@@ -401,18 +441,114 @@ def test_thread_boundary_accepts_queue_handoff(tmp_path):
     assert rep.active == []
 
 
+# -- rules 8-10: Pallas kernel contracts --------------------------------------
+
+def test_kernel_tile_flags_unasserted_grid_division(tmp_path):
+    rep = lint_one(tmp_path, "repro/kernels/tiles.py", """\
+        import jax.experimental.pallas as pl
+
+        def launch(x, tile):
+            return pl.pallas_call(kern, grid=(x.shape[0] // tile,))(x)
+        """, KernelTileRule())
+    assert [f.rule for f in rep.active] == ["kernel-tile"]
+    assert "x.shape[0] // tile" in rep.active[0].message
+
+
+def test_kernel_tile_accepts_asserted_grid_and_local_assign(tmp_path):
+    rep = lint_one(tmp_path, "repro/kernels/tiles.py", """\
+        import jax.experimental.pallas as pl
+
+        def launch(x, tile):
+            assert x.shape[0] % tile == 0, "pad first"
+            grid = (x.shape[0] // tile,)
+            return pl.pallas_call(kern, grid=grid)(x)
+        """, KernelTileRule())
+    assert rep.active == []
+
+
+def test_kernel_dtype_flags_defaulted_creator_and_inf_fill(tmp_path):
+    rep = lint_one(tmp_path, "repro/kernels/accum.py", """\
+        import jax.numpy as jnp
+        import jax.experimental.pallas as pl
+
+        def kern(x_ref, o_ref):
+            acc = jnp.zeros((8, 8))
+            pad = jnp.full((8,), -jnp.inf, dtype=jnp.bfloat16)
+            o_ref[...] = acc + pad
+
+        def launch(x):
+            return pl.pallas_call(kern, grid=(1,))(x)
+        """, KernelDtypeRule())
+    assert sorted(f.rule for f in rep.active) == ["kernel-dtype",
+                                                  "kernel-dtype"]
+
+
+def test_kernel_dtype_accepts_explicit_and_outside_kernel(tmp_path):
+    rep = lint_one(tmp_path, "repro/kernels/accum.py", """\
+        import functools
+        import jax.numpy as jnp
+        import jax.experimental.pallas as pl
+
+        def kern(x_ref, o_ref, *, tile):
+            acc = jnp.zeros((8, 8), jnp.float32)
+            pad = jnp.full((8,), -jnp.inf, dtype=jnp.float32)
+            o_ref[...] = acc + pad
+
+        def launch(x):
+            host_side = jnp.zeros((4,))  # not a kernel body: exempt
+            return pl.pallas_call(
+                functools.partial(kern, tile=8), grid=(1,))(x)
+        """, KernelDtypeRule())
+    assert rep.active == []
+
+
+def test_note_trace_flags_jit_without_probe(tmp_path):
+    rep = lint_one(tmp_path, "repro/core/jitted.py", """\
+        import jax
+        from repro.kernels import ops
+
+        @jax.jit
+        def silent(x):
+            return x + 1
+
+        def _loud(x):
+            ops.note_trace("loud")
+            return x + 1
+
+        loud = jax.jit(_loud)
+        """, NoteTraceRule())
+    assert [f.rule for f in rep.active] == ["note-trace"]
+    assert "silent" in rep.active[0].message
+
+
+def test_note_trace_accepts_probe_after_docstring(tmp_path):
+    rep = lint_one(tmp_path, "repro/core/jitted.py", """\
+        import jax
+        from repro.kernels import ops
+
+        @jax.jit
+        def fine(x):
+            '''Docstrings don't count as the first statement.'''
+            ops.note_trace("fine")
+            return x + 1
+        """, NoteTraceRule())
+    assert rep.active == []
+
+
 # -- the shipped tree lints clean ---------------------------------------------
 
 def test_shipped_tree_is_clean():
-    """src/ and tests/ carry no active findings under the checked-in
-    baseline — the same invocation CI runs via ``make lint-mdrq``."""
-    rc = lint_main([str(REPO / "src"), str(REPO / "tests")])
+    """src/, tests/, benchmarks/ and examples/ carry no active findings
+    under the checked-in baseline — the same invocation CI runs via
+    ``make lint-mdrq``."""
+    rc = lint_main([str(REPO / p)
+                    for p in ("src", "tests", "benchmarks", "examples")])
     assert rc == 0
 
 
 def test_all_rules_have_ids_and_docs():
     ids = [r.rule_id for r in ALL_RULES]
-    assert len(ids) == len(set(ids)) == 7
+    assert len(ids) == len(set(ids)) == 10
     assert all(r.doc for r in ALL_RULES)
 
 

@@ -1,0 +1,236 @@
+"""Call-graph edge cases: aliased imports, decorator-registered counted
+launches, ``__init__.py`` re-export chains, import cycles, and PEP 420
+namespace-level module naming (``src/repro/`` has no ``__init__.py``).
+
+Fixture projects are written to tmp dirs with real ``__init__.py`` files so
+``module_name`` derives the same dotted names the rules match against.
+"""
+from __future__ import annotations
+
+import ast
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import engine
+from repro.analysis.callgraph import CallGraph, module_name
+from repro.analysis.rules import HostSyncRule
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def build_graph(tmp_path: Path, files: dict[str, str]) -> CallGraph:
+    pairs = []
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+        # every package level needs an __init__.py for module_name to walk
+        d = p.parent
+        while d != tmp_path:
+            (d / "__init__.py").touch()
+            d = d.parent
+        pairs.append((p, ast.parse(p.read_text())))
+    # re-parse __init__ files that were only touched above but also listed
+    seen = {p for p, _ in pairs}
+    for rel in files:
+        d = (tmp_path / rel).parent
+        while d != tmp_path:
+            init = d / "__init__.py"
+            if init not in seen:
+                pairs.append((init, ast.parse(init.read_text())))
+                seen.add(init)
+            d = d.parent
+    return CallGraph.build(pairs)
+
+
+def test_aliased_import_resolves_counted_op(tmp_path):
+    g = build_graph(tmp_path, {
+        "repro/kernels/myops.py": """\
+            def counted(op, reg=None):
+                def wrap(fn):
+                    return fn
+                return wrap
+            def _impl(batch):
+                return batch
+            big_scan = counted("big_scan_op")(_impl)
+            """,
+        "repro/serve/user.py": """\
+            from repro.kernels import myops as o
+            def drive(batch):
+                return o.big_scan(batch)
+            """,
+    })
+    assert g.counted_op("repro.serve.user", "o.big_scan") == "big_scan_op"
+    # the wrapped impl is registered under the same op
+    assert g.counted_op("repro.kernels.myops", "_impl") == "big_scan_op"
+
+
+def test_decorator_registered_counted_launch(tmp_path):
+    g = build_graph(tmp_path, {
+        "repro/kernels/deco.py": """\
+            from repro.kernels.myops import counted
+
+            @counted("deco_op")
+            def fused(batch):
+                return batch
+            """,
+        "repro/kernels/myops.py": """\
+            def counted(op):
+                def wrap(fn):
+                    return fn
+                return wrap
+            """,
+        "repro/core/user.py": """\
+            from repro.kernels.deco import fused
+            def drive(batch):
+                return fused(batch)
+            """,
+    })
+    assert g.counted_op("repro.kernels.deco", "fused") == "deco_op"
+    assert g.counted_op("repro.core.user", "fused") == "deco_op"
+
+
+def test_reexport_through_init_resolves(tmp_path):
+    g = build_graph(tmp_path, {
+        "repro/kernels/myops.py": """\
+            def counted(op):
+                def wrap(fn):
+                    return fn
+                return wrap
+
+            @counted("exported_op")
+            def big_scan(batch):
+                return batch
+            """,
+        "repro/kernels/__init__.py": """\
+            from repro.kernels.myops import big_scan
+            """,
+        "repro/serve/user.py": """\
+            from repro.kernels import big_scan
+            def drive(batch):
+                return big_scan(batch)
+            """,
+    })
+    # canonicalize follows the __init__ re-export to the real definition
+    assert g.resolve("repro.serve.user", "big_scan") \
+        == "repro.kernels.myops.big_scan"
+    assert g.counted_op("repro.serve.user", "big_scan") == "exported_op"
+
+
+def test_import_cycle_is_cycle_safe(tmp_path):
+    g = build_graph(tmp_path, {
+        "repro/core/a.py": """\
+            from repro.core.b import thing
+            """,
+        "repro/core/b.py": """\
+            from repro.core.a import thing
+            """,
+        "repro/core/user.py": """\
+            from repro.core.a import thing
+            def drive():
+                return thing()
+            """,
+    })
+    # neither module defines `thing`; the chain a -> b -> a terminates
+    assert g.resolve("repro.core.user", "thing") is None
+
+
+def test_method_resolution_walks_bases(tmp_path):
+    g = build_graph(tmp_path, {
+        "repro/core/base.py": """\
+            class BasePath:
+                def query_batch(self, batch):
+                    return batch
+            """,
+        "repro/core/paths.py": """\
+            from repro.core.base import BasePath
+            class FancyPath(BasePath):
+                def launch_batch(self, batch):
+                    return batch, None
+            """,
+    })
+    hit = g.lookup_method("repro.core.paths.FancyPath", "query_batch")
+    assert hit is not None
+    assert hit.qual == "repro.core.base.BasePath.query_batch"
+
+
+def test_attr_types_from_init_construction_and_annotation(tmp_path):
+    g = build_graph(tmp_path, {
+        "repro/core/scan.py": """\
+            class ColumnarScan:
+                def query_batch(self, batch):
+                    return batch
+            """,
+        "repro/core/paths.py": """\
+            from repro.core.scan import ColumnarScan
+            class DirectPath:
+                def __init__(self):
+                    self._scan = ColumnarScan()
+            class AnnotatedPath:
+                def __init__(self, scan: ColumnarScan):
+                    self._scan = scan
+            """,
+    })
+    assert g.classes["repro.core.paths.DirectPath"].attr_types["_scan"] \
+        == "repro.core.scan.ColumnarScan"
+    assert g.classes["repro.core.paths.AnnotatedPath"].attr_types["_scan"] \
+        == "repro.core.scan.ColumnarScan"
+
+
+def test_cross_module_host_sync_rides_aliased_import(tmp_path):
+    """A raw np.asarray() around an aliased counted launch in another
+    module is a host-sync finding — the taint crosses files."""
+    files = {
+        "repro/kernels/myops.py": """\
+            def counted(op):
+                def wrap(fn):
+                    return fn
+                return wrap
+
+            @counted("big_scan_op")
+            def big_scan(batch):
+                return batch
+            """,
+        "repro/serve/user.py": """\
+            import numpy as np
+            from repro.kernels import myops as o
+
+            def drive(batch):
+                return np.asarray(o.big_scan(batch))
+            """,
+    }
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+        d = p.parent
+        while d != tmp_path:
+            (d / "__init__.py").touch()
+            d = d.parent
+    rep = engine.run([tmp_path / rel for rel in files], [HostSyncRule()])
+    assert [f.rule for f in rep.active] == ["host-sync"]
+    assert "serve/user.py" in rep.active[0].file
+
+
+def test_namespace_module_name_absorbs_src_level():
+    """``src/repro/`` ships without ``__init__.py`` (PEP 420); module names
+    must still come out rooted at ``repro``."""
+    assert module_name(REPO / "src/repro/core/paths.py") == "repro.core.paths"
+    assert module_name(REPO / "src/repro/numerics.py") == "repro.numerics"
+    assert module_name(
+        REPO / "src/repro/kernels/__init__.py") == "repro.kernels"
+
+
+def test_namespace_module_name_in_tmp_src_layout(tmp_path):
+    p = tmp_path / "src" / "mypkg" / "sub" / "mod.py"
+    p.parent.mkdir(parents=True)
+    (p.parent / "__init__.py").touch()
+    p.write_text("X = 1\n")
+    # sub/ has __init__.py, mypkg/ is a namespace level under src/
+    assert module_name(p) == "mypkg.sub.mod"
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))
